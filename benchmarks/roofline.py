@@ -1,0 +1,219 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell:
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s          (197 TF bf16)
+    memory term     = HLO_bytes_per_chip / HBM_bw               (819 GB/s)
+    collective term = wire_bytes_per_chip / link_bw             (50 GB/s ICI)
+
+cost_analysis() of the SPMD-compiled module reports per-chip FLOPs/bytes.
+Collective wire bytes come from the post-SPMD HLO: per-op result bytes with
+ring-algorithm factors — all-gather (S-1)/S x result, all-reduce
+2(S-1)/S x result, reduce-scatter (S-1) x result (result is the 1/S shard),
+all-to-all (S-1)/S x result, collective-permute 1 x result — S parsed from
+replica_groups when available.
+
+MODEL_FLOPS is the analytic 6·N·D (train) or 2·N·D (prefill/decode) with
+N = active params; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/redundant
+compute (ratio < 1 means the compiled step does extra work: recompute,
+dispatch overhead, attention quadratic terms...).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import re
+from typing import Optional
+
+from repro.configs.base import SHAPES, get_config
+from repro.core.hardware import TPU_V5E
+
+WIRE_FACTORS = {"all-gather": lambda s: (s - 1) / s,
+                "all-reduce": lambda s: 2 * (s - 1) / s,
+                "reduce-scatter": lambda s: (s - 1),
+                "all-to-all": lambda s: (s - 1) / s,
+                "collective-permute": lambda s: 1.0}
+
+
+def active_params(cfg) -> float:
+    """Analytic active-parameter count (MoE counts k/E of routed experts)."""
+    n = cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    if cfg.num_codebooks:
+        n *= cfg.num_codebooks
+    per_layer = {}
+    d = cfg.d_model
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def attn_params():
+        return d * H * hd + 2 * d * KV * hd + H * hd * d
+
+    def mla_params():
+        return (d * H * (cfg.qk_nope_dim + cfg.qk_rope_dim) +
+                d * cfg.kv_lora_rank + d * cfg.qk_rope_dim +
+                cfg.kv_lora_rank * H * (cfg.qk_nope_dim + cfg.v_head_dim) +
+                H * cfg.v_head_dim * d)
+
+    def mlp_params(ff):
+        return 3 * d * ff
+
+    def moe_params(active=True):
+        m = cfg.moe
+        frac = (m.experts_per_token / m.num_experts) if active else 1.0
+        n = 3 * d * m.d_ff * m.num_experts * frac + d * m.num_experts
+        if m.num_shared_experts:
+            n += 3 * d * m.d_ff * m.num_shared_experts
+        return n
+
+    def mamba_params():
+        s = cfg.ssm
+        d_in = s.expand * d
+        heads = s.num_heads or d_in // s.head_dim
+        d_conv = d_in + 2 * s.state_dim
+        return d * (d_in + d_conv + heads) + 4 * d_conv + 3 * heads + \
+            d_in + d_in * d
+
+    def mlstm_params():
+        d_in = 2 * d
+        return d * 2 * d_in + 4 * d_in + d_in * (d_in // 2) * 2 + \
+            d_in * d_in + d_in * 2 * cfg.num_heads + d_in + d_in * d
+
+    def slstm_params():
+        Dh = d // cfg.num_heads
+        return 4 * d + d * 4 * d + cfg.num_heads * 4 * Dh * Dh + d + d * d
+
+    kinds = list(cfg.prologue) + list(cfg.period) * cfg.num_periods
+    shared_counted = False
+    total = n
+    for k in kinds:
+        if k in ("attn", "local"):
+            total += attn_params() + (moe_params() if cfg.moe else
+                                      mlp_params(cfg.d_ff))
+        elif k == "mla":
+            ff = cfg.prologue_d_ff if k in cfg.prologue and not shared_counted \
+                else 0
+            total += mla_params() + (moe_params() if cfg.moe else
+                                     mlp_params(cfg.d_ff))
+        elif k == "shared_attn":
+            if not shared_counted:
+                total += attn_params() + mlp_params(cfg.d_ff)
+                shared_counted = True
+        elif k == "mamba":
+            total += mamba_params()
+        elif k == "mlstm":
+            total += mlstm_params()
+        elif k == "slstm":
+            total += slstm_params()
+        elif k == "lstm":
+            total += 2 * d * 4 * d
+    return float(total)
+
+
+def model_flops(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    N = active_params(cfg)
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        return 6.0 * N * D / chips
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2.0 * N * D / chips
+    D = shape.global_batch * 1
+    return 2.0 * N * D / chips
+
+
+def terms(rec: dict, hw=TPU_V5E) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    chips = rec["chips"]
+    # trip-count-aware analytic cost preferred (see launch/costing.py); the
+    # raw XLA numbers undercount scanned loop bodies
+    ca = rec.get("cost_analytic")
+    if ca:
+        flops = ca["flops_per_chip"]
+        byts = ca["bytes_per_chip"]
+    else:
+        flops = rec["cost"]["flops"]
+        byts = rec["cost"]["bytes_accessed"]
+    compute_t = flops / hw.peak_flops
+    memory_t = byts / hw.fast_bw
+    group = 16  # model-axis ring by default
+    wire = 0.0
+    for coll, b in rec["collectives"]["bytes"].items():
+        wire += b * WIRE_FACTORS[coll](group)
+    coll_t = wire / hw.link_bw
+    dom = max((("compute", compute_t), ("memory", memory_t),
+               ("collective", coll_t)), key=lambda kv: kv[1])
+    mf = model_flops(rec["arch"], rec["shape"], chips)
+    total = max(compute_t, memory_t, coll_t)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec.get("mode"),
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "dominant": dom[0],
+        "model_flops": mf, "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_frac": (mf / hw.peak_flops) / total if total else 0.0,
+        "hbm_per_chip_GB": (rec["memory"]["argument_bytes"] +
+                            rec["memory"]["output_bytes"] +
+                            rec["memory"]["temp_bytes"]) / 1e9,
+    }
+
+
+LEVERS = {
+    "compute": "reduce recompute (larger MI / fewer remat blocks) or shrink "
+               "non-matmul ops; check useful_ratio",
+    "memory": "fuse elementwise chains, cast residuals/caches to bf16, or "
+              "re-tile so operands stay in VMEM",
+    "collective": "reshard to cut all-gathers (fold TP axes), overlap "
+                  "collectives with compute, or shrink payload (bf16/int8)",
+}
+
+
+def load(results_dir: str):
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        try:
+            recs = json.load(open(f))
+        except Exception:
+            continue
+        for rec in recs:
+            t = terms(rec)
+            if t:
+                out.append(t)
+    return out
+
+
+def table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | dominant "
+           "| useful | roofline frac | HBM GB/chip | lever |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} "
+            f"| {r['hbm_per_chip_GB']:.1f} | {LEVERS[r['dominant']][:40]}... |")
+    return "\n".join(lines)
+
+
+def run(results_dir: str = "results/dryrun"):
+    rows = load(results_dir)
+    out = [("roofline", "arch", "shape", "mesh", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_ratio", "roofline_frac")]
+    for r in rows:
+        out.append(("roofline", r["arch"], r["shape"], r["mesh"],
+                    f"{r['compute_s']:.4e}", f"{r['memory_s']:.4e}",
+                    f"{r['collective_s']:.4e}", r["dominant"],
+                    round(r["useful_ratio"], 3), round(r["roofline_frac"], 4)))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load(d)
+    print(table(rows))

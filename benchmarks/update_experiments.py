@@ -1,0 +1,73 @@
+"""Regenerate the data-derived sections of EXPERIMENTS.md from results/.
+
+    PYTHONPATH=src:. python benchmarks/update_experiments.py
+"""
+import glob
+import json
+import re
+from collections import Counter
+
+from benchmarks import roofline
+
+
+def perf_terms(path):
+    r = json.load(open(path))[0]
+    if not r.get("ok"):
+        return None
+    ca = r["cost_analytic"]
+    c = r["collectives"]["bytes"]
+    wire = sum(c[k] * {"all-gather": 15 / 16, "all-reduce": 2 * 15 / 16,
+                       "reduce-scatter": 15, "all-to-all": 15 / 16,
+                       "collective-permute": 1.0}[k] for k in c)
+    return (ca["flops_per_chip"] / 197e12, ca["bytes_per_chip"] / 819e9,
+            wire / 50e9)
+
+
+def main():
+    rows_sp = roofline.load("results/dryrun")
+    rows_mp = roofline.load("results/dryrun_mp")
+
+    table = roofline.table(rows_sp)
+    doms = Counter(r["dominant"] for r in rows_sp)
+    fr = sorted(rows_sp, key=lambda r: r["roofline_frac"])
+    best = fr[-1]
+    worst_train = [(r["arch"], round(r["roofline_frac"], 4))
+                   for r in fr if r["shape"] == "train_4k"][:3]
+    summary = (f"Dominant terms over {len(rows_sp)} single-pod cells: "
+               f"{dict(doms)}. Best baseline roofline fraction: "
+               f"{best['arch']}×{best['shape']} = {best['roofline_frac']:.3f}; "
+               f"worst train cells: {worst_train}.")
+
+    mp_lines = ["| arch | shape | compute s | memory s | coll s | dominant |",
+                "|---|---|---|---|---|---|"]
+    for r in rows_mp:
+        if r["shape"] == "train_4k":
+            mp_lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+                f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+                f"| {r['dominant']} |")
+
+    md = open("EXPERIMENTS.md").read()
+    # replace the roofline table (between the §Roofline header paragraph and
+    # the "Dominant terms" line) wholesale
+    start = md.index("| arch | shape | mesh |")
+    end = md.index("## §Perf — hillclimbing log")
+    section = (table + "\n\n" + summary +
+               "\n\nMulti-pod (2×16×16) train-cell terms (per-chip; the pod "
+               "axis adds the cross-pod gradient reduction to ENTRY "
+               "collectives):\n\n" + "\n".join(mp_lines) + "\n\n")
+    md = md[:start] + section + md[end:]
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md §Roofline refreshed:",
+          len(rows_sp), "sp cells,", len(rows_mp), "mp cells")
+
+    print("\nperf-cell terms (corrected):")
+    for f in sorted(glob.glob("results/perf/*.json*")):
+        t = perf_terms(f)
+        if t:
+            print(f"  {f.split('/')[-1]:45s} comp={t[0]:7.3f} "
+                  f"mem={t[1]:7.3f} coll={t[2]:8.3f}")
+
+
+if __name__ == "__main__":
+    main()

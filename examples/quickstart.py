@@ -1,0 +1,68 @@
+"""Quickstart: the Sentinel pipeline end-to-end on one small model.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build a model from the arch registry.
+2. Profile one training step at the data-object level (the paper's §3).
+3. Plan the migration interval (§4.4: Eq. 1/2 pruning + simulated sweep).
+4. Train with the planned offload configuration.
+5. Compare Sentinel vs the IAL baseline vs fast-memory-only on the simulator.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import hmsim, planner, profiler
+from repro.core.hardware import PAPER_HM
+from repro.core.offload import from_plan
+from repro.data.pipeline import DataConfig
+from repro.models import model
+from repro.models.layers import split_params
+from repro.optim import adamw
+from repro.train import loop
+
+ARCH = "smollm-360m"
+
+# 1. model ------------------------------------------------------------------
+cfg = get_config(ARCH).reduced()
+params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+print(f"[1] {ARCH} (reduced): {cfg.num_layers} layers, d={cfg.d_model}")
+
+# 2. profile one step (exact, zero-overhead: jaxpr walk) ---------------------
+pshapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+prof = profiler.trace_profile(
+    jax.grad(lambda p, b: model.loss_fn(p, cfg, b, unroll_periods=True)),
+    pshapes, batch, num_periods=cfg.num_periods)
+acts = [o for o in prof.objects if o.kind == "activation"]
+short = prof.short_lived(include_fused=True)
+print(f"[2] profiled {len(prof.objects)} data objects; "
+      f"{100 * len(short) / len(acts):.0f}% short-lived (paper Obs.1: ~92%); "
+      f"peak {prof.peak_bytes() / 1e6:.1f} MB")
+
+# 3. plan the migration interval --------------------------------------------
+fast = 0.25 * prof.peak_bytes()
+plan = planner.plan(prof, PAPER_HM, fast)
+print(f"[3] planned MI={plan.mi} ({plan.steps_used} steps used for p,m&t; "
+      f"paper Table 3 uses 2-8); cases={plan.sim.cases}")
+
+# 4. train with the planned Sentinel config ----------------------------------
+scfg = from_plan(prof, plan)
+out = loop.run(cfg,
+               loop.TrainConfig(steps=20, ckpt_every=0,
+                                ckpt_dir="/tmp/repro_quickstart"),
+               scfg,
+               adamw.OptConfig(total_steps=20, warmup_steps=2),
+               DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=4))
+print(f"[4] trained 20 steps with MI={scfg.mi_periods} offload blocks; "
+      f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+
+# 5. the paper's comparison ---------------------------------------------------
+fast_only = hmsim.simulate_static(prof, PAPER_HM, "fast")
+ial = hmsim.simulate_caching(prof, PAPER_HM, fast, "ial")
+print(f"[5] step-time vs fast-only: sentinel "
+      f"{plan.sim.step_time / fast_only.step_time:.3f}x, "
+      f"IAL {ial.step_time / fast_only.step_time:.3f}x "
+      f"(paper: <=1.08x and ~1.17-1.32x)")

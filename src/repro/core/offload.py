@@ -1,0 +1,109 @@
+"""Sentinel's runtime on TPU: migration-interval-blocked activation offload.
+
+The paper's mechanism maps onto XLA as follows (DESIGN.md §2):
+
+  - long-lived data objects  = block-boundary residuals ("block_out") and
+    optimizer state. The layer stack runs as scan-over-blocks of ``mi_periods``
+    periods; the only values saved for backward are the tagged block carries,
+    offloaded to ``pinned_host`` (slow memory). XLA emits asynchronous
+    copy-start/copy-done pairs, overlapping migration with block compute —
+    the paper's "migration happens in the middle of each interval".
+  - short-lived data objects = everything inside a block: recomputed during
+    backward from the prefetched carry, i.e. they only ever live in fast
+    memory (HBM) — the reserved-pool policy ("never considered for
+    migration") realized through rematerialization.
+  - the migration interval   = ``mi_periods``. Small MI: more carries, more
+    PCIe traffic, less recompute. Large MI: less traffic, more recompute and
+    a larger intra-block working set (the Eq. 1 space constraint). The
+    planner prunes and picks it from the profiled trace (core/planner.py).
+
+Modes:
+  "offload"   paper-faithful Sentinel: save block carries to host.
+  "save_hbm"  same structure, carries stay in HBM (ablation / small models).
+  "remat"     save nothing (full recompute; memory floor).
+  "full"      no checkpointing (save everything; speed ceiling, memory peak).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.core.hardware import HWSpec, TPU_V5E
+from repro.core.planner import Plan, mi_to_periods
+from repro.core.profiler import TraceProfile
+
+
+@dataclass(frozen=True)
+class SentinelConfig:
+    mode: str = "offload"            # offload | save_hbm | remat | full
+    mi_periods: int = 1
+    offload_opt_state: bool = False  # optimizer moments live in pinned_host
+    offload_names: tuple = ("block_out",)
+
+    @property
+    def uses_blocks(self) -> bool:
+        return self.mode in ("offload", "save_hbm", "remat")
+
+
+def remat_policy(scfg: SentinelConfig):
+    cp = jax.checkpoint_policies
+    if scfg.mode == "offload":
+        return cp.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=list(scfg.offload_names),
+            offload_src="device", offload_dst="pinned_host")
+    if scfg.mode == "save_hbm":
+        return cp.save_only_these_names(*scfg.offload_names)
+    if scfg.mode == "remat":
+        return cp.nothing_saveable
+    return None                      # "full": no checkpoint wrapper
+
+
+def loss_kwargs(scfg: SentinelConfig) -> dict:
+    """kwargs for model.loss_fn implementing this Sentinel config."""
+    if scfg.mode == "full":
+        return {}
+    return {
+        "remat_policy": remat_policy(scfg),
+        "mi_periods": scfg.mi_periods,
+        "tag_block_out": scfg.mode in ("offload", "save_hbm"),
+    }
+
+
+def from_plan(profile: TraceProfile, plan: Plan, *, hw: HWSpec = TPU_V5E,
+              offload_opt_state: bool = False) -> SentinelConfig:
+    """Planner output -> runtime config. The plan's MI is in timeline steps,
+    which map 1:1 to periods inside the fwd/bwd regions."""
+    mi = mi_to_periods(profile, plan.mi)
+    # round to a divisor of num_periods so the blocked scan tiles exactly
+    P = profile.num_periods
+    divisors = [d for d in range(1, P + 1) if P % d == 0]
+    mi = min(divisors, key=lambda d: abs(d - mi))
+    return SentinelConfig(mode="offload", mi_periods=mi,
+                          offload_opt_state=offload_opt_state)
+
+
+def opt_state_sharding(rules, logical_axes, *, offload: bool):
+    """NamedShardings for optimizer moments; pinned_host when offloaded
+    (Sentinel: rarely-accessed long-lived objects live in slow memory)."""
+    from repro.sharding import is_axes_leaf
+    import jax.tree_util as jtu
+
+    def one(ax):
+        s = rules.sharding(ax)
+        if offload:
+            s = s.with_memory_kind("pinned_host")
+        return s
+    return jax.tree.map(one, logical_axes, is_leaf=is_axes_leaf)
+
+
+def estimate_offload_traffic(profile: TraceProfile, mi_periods: int,
+                             carry_bytes: int) -> dict:
+    """Napkin numbers for the planner/benchmarks: bytes offloaded per step and
+    the PCIe time vs compute time per block (Eq. 2 on TPU)."""
+    P = profile.num_periods
+    nb = max(1, P // max(1, mi_periods))
+    bytes_off = 2 * nb * carry_bytes           # out in fwd, back in bwd
+    return {"blocks": nb, "bytes_offloaded": bytes_off}

@@ -1,0 +1,128 @@
+"""Migration-interval planner (paper §4.4).
+
+Given one profiled training step, the planner:
+  1. computes RS(MI), Data(MI), T(MI) for every candidate interval,
+  2. prunes by the paper's two constraints,
+       space (Eq. 1):  Data(MI) < S - RS(MI)
+       time  (Eq. 2):  T(MI)    > (S - RS(MI)) / BW
+  3. evaluates surviving candidates on the HM simulator (the runtime system
+     would use one real training step per candidate — same procedure, measured
+     instead of simulated), resolving Case 3 by test-and-trial,
+  4. returns the sweet spot.
+
+The same object drives the JAX offload engine: ``mi_periods`` is the layer-scan
+block size used by core/offload.py, and ``offload_uids`` the long-lived objects
+worth migrating.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.hardware import HWSpec
+from repro.core.hmsim import SimResult, simulate_sentinel_tt
+from repro.core.profiler import TraceProfile
+
+
+@dataclass
+class Candidate:
+    mi: int
+    rs: float
+    data: float          # max prefetch bytes over intervals
+    t: float             # min compute seconds over intervals
+    space_ok: bool
+    time_ok: bool
+    sim: Optional[SimResult] = None
+
+
+@dataclass
+class Plan:
+    mi: int
+    stall_on_case3: bool
+    fast_bytes: float
+    candidates: List[Candidate] = field(default_factory=list)
+    sim: Optional[SimResult] = None
+    steps_used: int = 0          # "p, m & t" budget actually consumed (Table 3)
+
+    @property
+    def throughput(self) -> float:
+        return self.sim.throughput if self.sim else 0.0
+
+
+def interval_stats(profile: TraceProfile, mi: int, hw: HWSpec):
+    """(Data(MI), T(MI)) per interval: prefetch bytes needed by each interval
+    and compute time available in the preceding one."""
+    steps = profile.num_steps
+    acts = [o for o in profile.objects if o.accesses]
+    data_per: Dict[int, float] = {}
+    t_per: Dict[int, float] = {}
+    n_int = (steps + mi - 1) // mi
+    for i in range(n_int):
+        lo, hi = i * mi, min((i + 1) * mi, steps)
+        t_per[i] = sum(max(profile.step_flops(s) / hw.peak_flops,
+                           profile.step_bytes(s) / hw.fast_bw)
+                       for s in range(lo, hi))
+        data_per[i] = 0.0
+    # the final boundary step (embedding grad + optimizer) touches every
+    # weight/moment, but elementwise: it streams tile-by-tile and never needs
+    # them resident together (ZeRO-Offload-style), so it is exempt from the
+    # Eq. 1 capacity constraint (it still costs migration *time*).
+    opt_step = steps - 1
+    for o in acts:
+        if o.kind == "weight" or o.lifetime >= 2:
+            touched = sorted({a // mi for a in o.accesses if a != opt_step})
+            for i in touched:
+                # fetched for interval i (unless it was just produced there)
+                if o.kind == "weight" or o.birth // mi != i:
+                    data_per[i] += o.size
+    return data_per, t_per
+
+
+def enumerate_candidates(profile: TraceProfile, hw: HWSpec, fast_bytes: float,
+                         max_mi: Optional[int] = None) -> List[Candidate]:
+    out = []
+    steps = profile.num_steps
+    max_mi = max_mi or max(1, steps // 2)
+    for mi in range(1, max_mi + 1):
+        rs = profile.rs_bytes(mi)
+        data_per, t_per = interval_stats(profile, mi, hw)
+        data = max(data_per.values()) if data_per else 0.0
+        t = min(t_per.values()) if t_per else 0.0
+        space_ok = data < fast_bytes - rs
+        time_ok = t > data / hw.mig_bw      # tight form of Eq. 2 (see note)
+        out.append(Candidate(mi, rs, data, t, space_ok, time_ok))
+    return out
+
+
+def plan(profile: TraceProfile, hw: HWSpec, fast_bytes: float,
+         max_mi: Optional[int] = None, sim_all: bool = False) -> Plan:
+    """Pick the optimal migration interval.
+
+    Note on Eq. 2: the paper states T(MI) > (S - RS)/BW — the worst case of a
+    full fast-memory refill. We prune with the tighter per-interval form
+    T(MI) > Data(MI)/BW (a superset of the paper's surviving candidates) and
+    let the measured sweep decide, exactly as the paper's runtime does.
+    """
+    cands = enumerate_candidates(profile, hw, fast_bytes, max_mi)
+    survivors = [c for c in cands if c.space_ok and c.time_ok]
+    if not survivors:                        # fall back: least-bad candidates
+        survivors = [c for c in cands if c.space_ok] or cands
+    steps_used = 1                           # the profiling step
+    best: Optional[Candidate] = None
+    pool = survivors if not sim_all else cands
+    for c in pool:
+        c.sim = simulate_sentinel_tt(profile, hw, fast_bytes, c.mi)
+        steps_used += 1 + c.sim.detail.get("tt_steps_used", 0)
+        if best is None or c.sim.step_time < best.sim.step_time:
+            best = c
+    stall = best.sim.detail.get("tt_choice", "stall") != "slow-access"
+    p = Plan(mi=best.mi, stall_on_case3=stall, fast_bytes=fast_bytes,
+             candidates=cands, sim=best.sim, steps_used=steps_used)
+    return p
+
+
+def mi_to_periods(profile: TraceProfile, mi: int) -> int:
+    """Convert a timeline-step MI to layer-scan block size (periods per block)
+    for the offload engine. Timeline steps map 1:1 to periods inside the
+    forward/backward regions."""
+    return max(1, min(mi, profile.num_periods))

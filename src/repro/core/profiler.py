@@ -1,0 +1,297 @@
+"""Sentinel's data-object profiler, reimagined for XLA.
+
+The paper profiles one training step by PTE-poisoning every page and forcing
+one data object per page. Under JAX the dataflow graph *is* the ground truth:
+walking the traced jaxpr of one train step yields every data object (tensor),
+its exact size, its defining and last-consuming layer, and its access count —
+zero runtime overhead and exact by construction (the workload repeatability the
+paper leverages holds exactly: every step replays the same HLO).
+
+Layers are attributed through ``jax.named_scope("period_i")`` (the model's
+``unroll_periods=True`` profiling mode); backward-pass equations inherit the
+scope under ``transpose(...)`` in the name stack, so one traced ``grad(loss)``
+covers the full forward+backward timeline: forward period i -> step i,
+backward period i -> step (2P - 1 - i), P = num_periods.
+
+Call-like equations (inner scans, remat, pjit) are tracked as opaque objects at
+the boundary (their outputs are the data objects Sentinel can migrate) while
+their FLOPs/bytes recurse with step attribution — inner temporaries are
+short-lived by construction and belong to the reserved-pool accounting.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PAGE = 4096
+
+# elementwise / layout primitives XLA fuses into consumers when single-use
+_FUSIBLE = frozenset({
+    "add", "sub", "mul", "div", "neg", "exp", "log", "tanh", "logistic",
+    "rsqrt", "sqrt", "pow", "integer_pow", "max", "min", "abs", "sign",
+    "convert_element_type", "select_n", "broadcast_in_dim", "reshape",
+    "transpose", "squeeze", "expand_dims", "slice", "concatenate", "pad",
+    "stop_gradient", "custom_jvp_call", "erf", "floor", "ceil", "round",
+    "is_finite", "and", "or", "not", "xor", "eq", "ne", "lt", "le", "gt",
+    "ge", "rem", "clamp", "real", "imag", "iota", "copy",
+})
+
+
+@dataclass
+class DataObject:
+    uid: int
+    size: int                 # bytes
+    birth: int                # layer-step index (-1 = pre-model / boundary)
+    death: int                # last read step
+    reads: int                # number of consuming equations
+    kind: str                 # "weight" | "activation"
+    shape: Tuple[int, ...] = ()
+    dtype: str = ""
+    accesses: List[int] = field(default_factory=list)  # distinct steps touched
+    prim: str = ""            # producing primitive
+
+    # XLA fuses single-consumer elementwise chains into their consumer: those
+    # values never hit main memory. The memory-relevant object set excludes
+    # them (mirrors the paper's "data object" = an actual allocation).
+    @property
+    def fused(self) -> bool:
+        return self.prim in _FUSIBLE and self.reads <= 1
+
+    @property
+    def lifetime(self) -> int:
+        return max(0, self.death - self.birth)
+
+    @property
+    def small(self) -> bool:
+        return self.size < PAGE
+
+
+@dataclass
+class LayerStats:
+    step: int
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    produced_long: float = 0.0   # bytes of long-lived objects born here
+    produced_short: float = 0.0
+    reads_long: float = 0.0      # bytes of long-lived objects last-read here
+
+
+@dataclass
+class TraceProfile:
+    num_periods: int
+    num_steps: int               # 2 * num_periods (fwd + bwd timeline)
+    objects: List[DataObject] = field(default_factory=list)
+    layers: Dict[int, LayerStats] = field(default_factory=dict)
+    total_flops: float = 0.0
+
+    # ---------------- aggregate views used by planner / benchmarks ----------
+    def short_lived(self, max_span: int = 1, include_fused: bool = False) -> List[DataObject]:
+        return [o for o in self.objects if o.kind == "activation"
+                and o.lifetime <= max_span and (include_fused or not o.fused)]
+
+    def long_lived(self, min_span: int = 2) -> List[DataObject]:
+        return [o for o in self.objects
+                if o.kind == "activation" and o.lifetime >= min_span
+                and not o.fused]
+
+    def weights(self) -> List[DataObject]:
+        return [o for o in self.objects if o.kind == "weight"]
+
+    def peak_bytes(self) -> float:
+        """Peak concurrently-live bytes over the step timeline."""
+        deltas = defaultdict(float)
+        for o in self.objects:
+            if o.kind == "activation" and o.fused:
+                continue
+            deltas[o.birth] += o.size
+            deltas[o.death + 1] -= o.size
+        peak = cur = 0.0
+        for s in sorted(deltas):
+            cur += deltas[s]
+            peak = max(peak, cur)
+        return peak
+
+    def rs_bytes(self, mi: int) -> float:
+        """RS(MI): the reserved fast-memory pool of paper §4.3 — peak
+        *concurrently alive* short-lived bytes within any MI-step interval.
+        The pool is reused as objects free (paper: "the space is dynamically
+        shrunk ... when a page in the space is freed"), so RS is nearly
+        MI-independent — matching the paper's observation that RS is stable.
+        """
+        alive = defaultdict(float)
+        for o in self.short_lived():
+            for s in range(o.birth, o.death + 1):
+                alive[s] += o.size
+        if not alive:
+            return 0.0
+        # max over intervals of (max alive within the interval) == global max
+        return max(alive.values())
+
+    def step_flops(self, s: int) -> float:
+        ls = self.layers.get(s)
+        return ls.flops if ls else 0.0
+
+    def step_bytes(self, s: int) -> float:
+        ls = self.layers.get(s)
+        return ls.bytes_accessed if ls else 0.0
+
+
+_PERIOD_RE = re.compile(r"period_(\d+)")
+
+# Timeline layout (P = num_periods):
+#   0            embed / input boundary (forward)
+#   1 .. P       forward periods
+#   P+1          head + loss (fwd & bwd — same point in time)
+#   P+2 .. 2P+1  backward periods (period p -> 2P+1-p)
+#   2P+2         embedding gradient + optimizer update
+
+
+def timeline_steps(num_periods: int) -> int:
+    return 2 * num_periods + 3
+
+
+def _layer_of(name_stack: str, num_periods: int) -> Optional[int]:
+    P = num_periods
+    if "boundary_head" in name_stack:
+        return P + 1
+    if "boundary_in" in name_stack:
+        return 2 * P + 2 if "transpose" in name_stack else 0
+    if "boundary_opt" in name_stack:
+        return 2 * P + 2
+    m = _PERIOD_RE.search(name_stack)
+    if not m:
+        return None
+    p = int(m.group(1))
+    if "transpose" in name_stack:          # backward of period p
+        return 2 * P + 1 - p
+    return p + 1
+
+
+def _dot_flops(eqn) -> float:
+    (lc, _), _ = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    k = float(np.prod([lhs.shape[i] for i in lc])) if lc else 1.0
+    return 2.0 * float(out.size) * k
+
+
+def _sub_jaxprs(eqn):
+    subs = []
+    for v in eqn.params.values():
+        vals = v if isinstance(v, (list, tuple)) else [v]
+        for item in vals:
+            if hasattr(item, "eqns"):
+                subs.append(item)
+            elif hasattr(item, "jaxpr") and hasattr(item.jaxpr, "eqns"):
+                subs.append(item.jaxpr)
+    return subs
+
+
+def _var_bytes(v) -> int:
+    aval = getattr(v, "aval", None)
+    if aval is None or not hasattr(aval, "shape"):
+        return 0
+    return int(aval.size) * aval.dtype.itemsize
+
+
+def trace_profile(fn: Callable, *args, num_periods: int, **kwargs) -> TraceProfile:
+    """Trace ``fn(*args)`` (typically grad(loss) or a train step) and build the
+    data-object profile. Args may be ShapeDtypeStructs (no allocation)."""
+    jaxpr = jax.make_jaxpr(fn, **kwargs)(*args)
+    P = num_periods
+    prof = TraceProfile(num_periods=P, num_steps=timeline_steps(P))
+    objects: Dict[Any, DataObject] = {}
+    uid = [0]
+
+    def birth(var, step, kind, prim=""):
+        if not hasattr(var, "count"):   # Literal constants aren't data objects
+            return
+        b = _var_bytes(var)
+        if b == 0:
+            return
+        objects[var] = DataObject(uid[0], b, step, step, 0, kind,
+                                  tuple(var.aval.shape), str(var.aval.dtype),
+                                  [] if kind == "weight" else [step], prim)
+        uid[0] += 1
+
+    def read(var, step):
+        if not hasattr(var, "count"):
+            return
+        o = objects.get(var)
+        if o is not None:
+            o.reads += 1
+            o.death = max(o.death, step)
+            if not o.accesses or o.accesses[-1] != step:
+                o.accesses.append(step)
+
+    def stats(step):
+        return prof.layers.setdefault(step, LayerStats(step))
+
+    def recurse_stats(eqns, default_step):
+        """FLOPs/bytes attribution inside call-like eqns (no object tracking)."""
+        for eqn in eqns:
+            step = _layer_of(str(eqn.source_info.name_stack), P)
+            step = default_step if step is None else step
+            subs = _sub_jaxprs(eqn)
+            if subs:
+                for s in subs:
+                    recurse_stats(s.eqns, step)
+                continue
+            ls = stats(step)
+            f = _dot_flops(eqn) if eqn.primitive.name == "dot_general" else \
+                float(sum(_var_bytes(v) for v in eqn.outvars)) / max(
+                    1, eqn.outvars[0].aval.dtype.itemsize
+                    if hasattr(eqn.outvars[0], "aval") else 1)
+            ls.flops += f
+            prof.total_flops += f
+            ls.bytes_accessed += sum(_var_bytes(v)
+                                     for v in list(eqn.invars) + list(eqn.outvars))
+
+    for var in jaxpr.jaxpr.invars:
+        birth(var, 0, "weight")
+
+    last_step = 0  # unscoped eqns inherit the most recent scoped step
+    for eqn in jaxpr.jaxpr.eqns:
+        step = _layer_of(str(eqn.source_info.name_stack), P)
+        step = last_step if step is None else step
+        last_step = step
+        for v in eqn.invars:
+            read(v, step)
+        for v in eqn.outvars:
+            birth(v, step, "activation", eqn.primitive.name)
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for s in subs:
+                recurse_stats(s.eqns, step)
+        else:
+            ls = stats(step)
+            f = _dot_flops(eqn) if eqn.primitive.name == "dot_general" else \
+                float(sum(int(v.aval.size) for v in eqn.outvars
+                          if hasattr(v, "aval") and hasattr(v.aval, "shape")))
+            ls.flops += f
+            prof.total_flops += f
+            ls.bytes_accessed += sum(_var_bytes(v)
+                                     for v in list(eqn.invars) + list(eqn.outvars))
+
+    # outputs of the jaxpr are read at the end of the timeline
+    for v in jaxpr.jaxpr.outvars:
+        read(v, timeline_steps(P) - 1)
+
+    prof.objects = list(objects.values())
+
+    # per-layer long/short production aggregates
+    for o in prof.objects:
+        if o.kind != "activation":
+            continue
+        ls = stats(max(o.birth, 0))
+        if o.lifetime <= 1:
+            ls.produced_short += o.size
+        else:
+            ls.produced_long += o.size
+            stats(max(o.death, 0)).reads_long += o.size
+    return prof

@@ -1,0 +1,101 @@
+"""Flash-decode for TPU (Pallas): one query token against a KV cache.
+
+Layout: q (B, H, D); k_cache, v_cache (B, S, KVH, D); lengths (B,). The grid
+is (batch, kv_head, kv_block) — all G=H/KVH query heads of a KV head are
+processed together as a (G, D) tile so the MXU sees a matmul, not a matvec.
+Online-softmax state in VMEM scratch, kv blocks sequential.
+
+Oracle: repro.kernels.ref.decode_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 20
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+            window, softcap_val, bk, s_total):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+
+    length = len_ref[0]
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = kpos < length
+    if window:
+        ok &= kpos >= (length - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1)
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
+                     softcap_val: float = 0.0, block_k: int = 256,
+                     interpret: bool = False):
+    """q: (B, H, D); caches (B, S, KVH, D); lengths (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+
+    bk = min(block_k, S)
+    pk = (-S) % bk
+    if pk:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nk = k_cache.shape[1] // bk
+
+    qg = q.reshape(B, KVH, G, D)
+    kernel = functools.partial(_kernel, window=window, softcap_val=softcap_val,
+                               bk=bk, s_total=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KVH, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, D)

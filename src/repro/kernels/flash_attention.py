@@ -1,0 +1,120 @@
+"""Flash attention for TPU (Pallas): blocked online-softmax with VMEM tiling.
+
+Supports causal, sliding-window, logit-softcap and GQA (KV heads indexed via
+the BlockSpec index map — repeated KV heads are never materialized in HBM or
+VMEM). Layout: q (B, H, Sq, D); k, v (B, KVH, Skv, D).
+
+Grid is (batch, head, q_block, kv_block) with the kv dimension innermost and
+sequential; the running (acc, m, l) online-softmax state lives in VMEM
+scratch, so each q block's output tile is revisited across kv blocks — the
+standard TPU flash schedule. Block shapes default to 128 (MXU-aligned).
+
+Oracle: repro.kernels.ref.attention_ref (tests sweep shapes/dtypes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 20
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *, scale, causal,
+            window, softcap_val, bq, bk, skv, sq):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+
+    # positions: queries right-aligned against the kv timeline
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (skv - sq)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = kpos < skv                                 # padded kv tail
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_s[...] * alpha + jnp.sum(p, axis=1)
+    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+    l_s[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap_val: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Skv, KVH, D). Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = D ** -0.5
+
+    qt = q.transpose(0, 2, 1, 3)                    # (B,H,Sq,D)
+    kt = k.transpose(0, 2, 1, 3)                    # (B,KVH,Skv,D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    pq = (-Sq) % bq
+    pk = (-Skv) % bk
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = qt.shape[2] // bq
+    nk = kt.shape[2] // bk
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, softcap_val=softcap_val,
+                               bq=bq, bk=bk, skv=Skv, sq=Sq)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, g=G: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, g=G: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    if pq:
+        out = out[:, :, :Sq]
+    return out.transpose(0, 2, 1, 3)

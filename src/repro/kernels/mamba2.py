@@ -1,0 +1,117 @@
+"""Mamba2 SSD chunk scan for TPU (Pallas).
+
+The chunked SSD algorithm (intra-chunk quadratic attention-like term + inter-
+chunk recurrence) with the per-(batch, head-block) state carried in VMEM
+scratch across the sequential chunk grid dimension — HBM traffic is one read
+of x/dt/B/C and one write of y; the (H, P, N) state never leaves VMEM.
+
+Layouts: x (B, H, S, P); dt (B, H, S); A (H,); Bm, Cm (B, S, N).
+Grid: (batch, head_block, chunk) with chunk innermost/sequential.
+
+Oracle: repro.kernels.ref.ssd_chunked_ref (== ssd_ref sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_s, *, bh, q):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    x = x_ref[0].astype(jnp.float32)                 # (bh, q, P)
+    dt = dt_ref[0].astype(jnp.float32)               # (bh, q)
+    A = a_ref[...].astype(jnp.float32)               # (bh,)
+    Bm = b_ref[0].astype(jnp.float32)                # (q, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (q, N)
+
+    logdec = dt * A[:, None]                         # (bh, q)
+    l = jnp.cumsum(logdec, axis=1)                   # inclusive
+    total = l[:, -1]                                 # (bh,)
+
+    # intra-chunk: G[h,t,s] = (C_t . B_s) exp(l_t - l_s) dt_s  for s <= t
+    # (exponent masked before exp: s > t entries overflow otherwise)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (q,q)
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    spos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    mask = (spos <= tpos)[None]
+    decay = jnp.exp(jnp.where(mask, l[:, :, None] - l[:, None, :], -jnp.inf))
+    G = CB[None] * decay * dt[:, None, :]                          # (bh,t,s)
+    y = jax.lax.dot_general(G, x, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)    # (bh,t,P)
+
+    # inter-chunk: y += exp(l_t) * C_t @ h^T   (h: (bh, P, N))
+    h = h_s[...]
+    ch = jax.lax.dot_general(
+        jnp.broadcast_to(Cm[None], (x.shape[0], q, Cm.shape[-1])), h,
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    y = y + ch * jnp.exp(l)[..., None]
+
+    # state update: h' = exp(total) h + sum_s exp(total - l_s) dt_s x_s B_s^T
+    w = jnp.exp(total[:, None] - l) * dt             # (bh, q)
+    xw = x * w[..., None]                            # (bh, q, P)
+    hb = jax.lax.dot_general(
+        xw, jnp.broadcast_to(Bm[None], (x.shape[0], q, Bm.shape[-1])),
+        (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32)
+    h_s[...] = h * jnp.exp(total)[:, None, None] + hb
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        hout_ref[0] = h_s[...]
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, h0=None, block_heads: int = 8,
+        interpret: bool = False):
+    """x: (B, S, H, P); dt: (B, S, H); A: (H,); Bm, Cm: (B, S, N).
+    Returns (y (B, S, H, P), h_final (B, H, P, N)). h0 must be None (training
+    from zero state; pass-through to the jnp reference otherwise)."""
+    if h0 is not None:
+        from repro.kernels.ref import ssd_chunked_ref
+        return ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    q = min(chunk, S)
+    assert S % q == 0, f"seq {S} % chunk {q} != 0"
+    nc = S // q
+    bh = min(block_heads, H)
+    assert H % bh == 0
+    nh = H // bh
+
+    xt = x.transpose(0, 2, 1, 3)                     # (B,H,S,P)
+    dtt = dt.transpose(0, 2, 1)                      # (B,H,S)
+
+    kernel = functools.partial(_kernel, bh=bh, q=q)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, bh, q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, bh, q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((bh,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bh, q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, bh, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xt.shape, x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bh, P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A.astype(jnp.float32), Bm, Cm)
+    return y.transpose(0, 2, 1, 3), h

@@ -1,0 +1,73 @@
+"""Kernel dispatch: jit'd public ops that pick the Pallas TPU kernel or the
+pure-jnp oracle (CPU / debugging) per backend and flag.
+
+``use_pallas(True)`` or env REPRO_USE_PALLAS=1 forces the Pallas path (with
+interpret=True automatically on CPU so tests exercise the kernel body).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_FORCE = {"pallas": os.environ.get("REPRO_USE_PALLAS", "") == "1"}
+
+
+def use_pallas(on: bool = True):
+    _FORCE["pallas"] = on
+
+
+def _pallas_enabled() -> bool:
+    return _FORCE["pallas"] or jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap_val=0.0):
+    if _pallas_enabled():
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap_val=softcap_val, interpret=_interpret())
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap_val=softcap_val)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=0, softcap_val=0.0):
+    if _pallas_enabled():
+        from repro.kernels import decode_attention as da
+        return da.decode_attention(q, k_cache, v_cache, lengths, window=window,
+                                   softcap_val=softcap_val, interpret=_interpret())
+    return _ref.decode_attention_ref(q, k_cache, v_cache, lengths, window=window,
+                                     softcap_val=softcap_val)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk=256, h0=None):
+    if _pallas_enabled():
+        from repro.kernels import mamba2 as m2
+        return m2.ssd(x, dt, A, Bm, Cm, chunk=chunk, h0=h0, interpret=_interpret())
+    return _ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+
+
+ssd_decode = _ref.ssd_decode_ref     # single-step: pure jnp is already optimal
+slstm = _ref.slstm_ref
+
+# mLSTM execution mode: 0 = sequential scan (baseline), N = chunkwise-parallel
+# with chunk length N (the xlstm §Perf lever; REPRO_MLSTM_CHUNK or set below)
+_MLSTM = {"chunk": int(os.environ.get("REPRO_MLSTM_CHUNK", "0"))}
+
+
+def mlstm_chunk_mode(chunk: int):
+    _MLSTM["chunk"] = chunk
+
+
+def mlstm(q, k, v, log_i, log_f, *, state=None):
+    c = _MLSTM["chunk"]
+    if c and q.shape[1] > 1 and q.shape[1] % c == 0:
+        return _ref.mlstm_chunked_ref(q, k, v, log_i, log_f, chunk=c,
+                                      state=state)
+    return _ref.mlstm_ref(q, k, v, log_i, log_f, state=state)

@@ -1,0 +1,221 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+MUST be the very first lines — jax locks the device count on first init:
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import sharding as shd                      # noqa: E402
+from repro.configs.base import SHAPES, cells, get_config   # noqa: E402
+from repro.core.hardware import TPU_V5E                # noqa: E402
+from repro.core.offload import SentinelConfig          # noqa: E402
+from repro.launch import specs                         # noqa: E402
+from repro.launch.mesh import make_production_mesh, make_rules  # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Sum byte sizes of every typed array in an HLO result type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, loop_trips: float = 1.0) -> dict:
+    """Per-collective-type byte totals from post-SPMD optimized HLO.
+
+    Bytes counted are the (per-device) result shapes — the payload each device
+    receives; ring wire factors are applied in roofline.py. XLA's text lists
+    while-loop bodies once, so collectives found inside non-ENTRY computations
+    (scan bodies — the per-layer TP collectives) are multiplied by
+    ``loop_trips`` (the layer-period trip count); ENTRY-level collectives
+    (gradient all-reduces, boundary reshards) count once.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+        elif line.startswith("%") or (line and not line[0].isspace()
+                                      and not line.startswith("ENTRY")):
+            in_entry = False
+        for coll in _COLLECTIVES:
+            if f" {coll}(" in line or f" {coll}-start(" in line:
+                lhs = line.split("=", 1)
+                if len(lhs) != 2:
+                    continue
+                shape_part = lhs[1].strip().split(coll)[0]
+                mult = 1.0 if in_entry else loop_trips
+                # XLA's *CPU* backend promotes bf16 all-reduces to f32
+                # (reducer "...promoted"); on TPU they run in bf16 — halve.
+                if "promoted" in line:
+                    mult *= 0.5
+                out[coll] += _shape_bytes(shape_part) * mult
+                counts[coll] += 1
+                break
+    return {"bytes": out, "counts": counts}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mode: str = "offload", mi: int = 0, fsdp: bool = False,
+             compress_grads: bool = False, seq_parallel: bool = False,
+             dp_only: bool = False, moe_group: int = 0) -> dict:
+    cfg = get_config(arch)
+    if moe_group and cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, group_size=moe_group))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = shape.kind
+    rules = make_rules(mesh, kind=kind,
+                       seq_shard=(shape_name == "long_500k"), fsdp=fsdp,
+                       seq_parallel=seq_parallel, dp_only=dp_only)
+    scfg = SentinelConfig(mode=mode,
+                          mi_periods=mi or specs.default_mi(cfg))
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": 512 if multi_pod else 256,
+           "kind": kind, "mode": mode, "mi_periods": scfg.mi_periods,
+           "fsdp": fsdp, "seq_parallel": seq_parallel, "dp_only": dp_only}
+    with mesh:
+        with shd.axis_rules(rules):
+            opt_cfg = None
+            if compress_grads:
+                from repro.optim import adamw
+                opt_cfg = adamw.OptConfig(compress_grads=True)
+            # build from the (possibly overridden) local cfg
+            if kind == "train":
+                fn, args, in_sh = specs.build_train_cell(
+                    cfg, shape, rules, scfg, opt_cfg)
+            elif kind == "prefill":
+                fn, args, in_sh = specs.build_prefill_cell(cfg, shape, rules)
+            else:
+                fn, args, in_sh = specs.build_decode_cell(cfg, shape, rules)
+
+            # trip-aware analytic cost (global program; /chips = roofline ideal)
+            from repro.launch.costing import jaxpr_cost
+            jc = jaxpr_cost(jax.make_jaxpr(fn)(*args))
+            rec["cost_analytic"] = {
+                "flops_per_chip": jc["flops"] / rec["chips"],
+                "matmul_flops_per_chip": jc["matmul_flops"] / rec["chips"],
+                "bytes_per_chip": jc["bytes"] / rec["chips"],
+            }
+
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "host_temp_bytes": ma.host_temp_size_in_bytes,
+            }
+            ca = compiled.cost_analysis()
+            rec["cost"] = {k: ca.get(k, 0.0)
+                           for k in ("flops", "bytes accessed",
+                                     "utilization operand 0 {}")
+                           if k in ca}
+            rec["cost"]["flops"] = ca.get("flops", 0.0)
+            rec["cost"]["bytes_accessed"] = ca.get("bytes accessed", 0.0)
+            txt = compiled.as_text()
+            P = cfg.num_periods + len(cfg.prologue)
+            rec["collectives"] = collective_bytes(txt, loop_trips=float(P))
+            rec["hlo_bytes"] = len(txt)
+    rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--mode", default="offload",
+                    choices=["offload", "save_hbm", "remat", "full"])
+    ap.add_argument("--mi", type=int, default=0)
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="Megatron-SP residual sharding (beyond-paper opt)")
+    ap.add_argument("--dp-only", action="store_true",
+                    help="fold the model axis into DP (small models)")
+    ap.add_argument("--mlstm-chunk", type=int, default=0,
+                    help="chunkwise-parallel mLSTM (xlstm perf lever)")
+    ap.add_argument("--moe-group", type=int, default=0,
+                    help="MoE dispatch group size override (memory lever)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.mlstm_chunk:
+        from repro.kernels import ops as kops
+        kops.mlstm_chunk_mode(args.mlstm_chunk)
+
+    if args.arch:
+        todo = [(args.arch, args.shape or "train_4k", False)]
+    else:
+        todo = cells()
+
+    results = []
+    for arch, shape_name, _skip in todo:
+        try:
+            rec = run_cell(arch, shape_name, multi_pod=args.multipod,
+                           mode=args.mode, mi=args.mi, fsdp=args.fsdp,
+                           compress_grads=args.compress_grads,
+                           seq_parallel=args.seq_parallel,
+                           dp_only=args.dp_only, moe_group=args.moe_group)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape_name, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        results.append(rec)
+        status = "ok" if rec.get("ok") else "FAIL"
+        print(f"[dryrun] {arch} x {shape_name} "
+              f"({'2x16x16' if args.multipod else '16x16'}): {status}",
+              flush=True)
+        if not rec.get("ok"):
+            print(rec.get("error"), flush=True)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    ok = sum(1 for r in results if r.get("ok"))
+    print(f"[dryrun] {ok}/{len(results)} cells passed")
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+"""Production mesh + sharding-rule construction.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro import sharding as shd
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_rules(mesh, *, kind: str = "train", fsdp: bool = False,
+               seq_shard: bool = False, seq_parallel: bool = False,
+               dp_only: bool = False):
+    """kind: train | prefill | decode. long-context decode sets seq_shard;
+    seq_parallel = Megatron-SP residual sharding; dp_only folds the model
+    axis into data parallelism (small models)."""
+    if kind == "train":
+        return shd.tp_dp_rules(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
+                               dp_only=dp_only)
+    return shd.serve_rules(mesh, seq_shard=seq_shard)

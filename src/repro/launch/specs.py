@@ -1,0 +1,175 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run cell — weak-type
+correct, shardable, zero allocation. Builds the (step_fn, example_args,
+in_shardings) triple per (arch × shape × mesh)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
+from repro.core.offload import SentinelConfig, loss_kwargs
+from repro.models import kvcache, model
+from repro.models.layers import split_params
+from repro.optim import adamw
+
+
+def _sds(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def param_structs(cfg: ModelConfig):
+    """(ShapeDtypeStruct tree, logical-axes tree) without materializing."""
+    ptree = jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+    return split_params(ptree)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, decode: bool = False) -> Dict[str, Any]:
+    B = shape.global_batch
+    S = 1 if decode else shape.seq_len
+    tok_shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+    out = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    if not decode:
+        if cfg.num_codebooks:
+            lab_shape = tok_shape
+        elif cfg.num_prefix_tokens:
+            lab_shape = (B, S + cfg.num_prefix_tokens)
+        else:
+            lab_shape = (B, S)
+        out["labels"] = jax.ShapeDtypeStruct(lab_shape, jnp.int32)
+        if cfg.num_prefix_tokens:
+            out["prefix_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+def batch_shardings(cfg, shape, rules, *, decode=False):
+    def spec(path_shape, logical):
+        return rules.sharding(logical)
+    out = {"tokens": rules.sharding(("batch", None, None)
+                                    if cfg.num_codebooks else ("batch", None))}
+    if not decode:
+        out["labels"] = rules.sharding(("batch", None, None)
+                                       if cfg.num_codebooks else ("batch", None))
+        if cfg.num_prefix_tokens:
+            out["prefix_embed"] = rules.sharding(("batch", None, None))
+    return out
+
+
+def shardings_from_axes(axes_tree, rules, sds_tree=None):
+    """Shardings per leaf; with sds_tree given, non-divisible dims fall back
+    to replication (kv=5 heads, 40 experts, odd vocab sizes...)."""
+    if sds_tree is None:
+        return jax.tree.map(lambda ax: rules.sharding(ax), axes_tree,
+                            is_leaf=shd.is_axes_leaf)
+    flat_ax = jax.tree.leaves(axes_tree, is_leaf=shd.is_axes_leaf)
+    flat_sds, treedef = jax.tree.flatten(sds_tree)
+    assert len(flat_ax) == len(flat_sds), (len(flat_ax), len(flat_sds))
+    out = [shd.sharding_for(s.shape, ax, rules)
+           for ax, s in zip(flat_ax, flat_sds)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, rules,
+                     scfg: SentinelConfig, opt_cfg=None):
+    """Returns (step_fn, args_sds, in_shardings) for one training step."""
+    opt_cfg = opt_cfg or adamw.OptConfig()
+    params_sds, axes = param_structs(cfg)
+    opt_sds = jax.eval_shape(lambda p: adamw.init(p, opt_cfg), params_sds)
+    state_sds = {"params": params_sds, "opt": opt_sds,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    p_sh = shardings_from_axes(axes, rules, params_sds)
+    opt_ax = {"m": axes, "v": axes, "count": ()}
+    if opt_cfg.compress_grads:
+        opt_ax["ef"] = axes
+    o_sh = shardings_from_axes(opt_ax, rules, opt_sds)
+    if scfg.offload_opt_state:
+        o_sh = jax.tree.map(
+            lambda s: s.with_memory_kind("pinned_host"), o_sh,
+            is_leaf=lambda x: hasattr(x, "memory_kind"))
+    state_sh = {"params": p_sh, "opt": o_sh,
+                "step": rules.sharding(())}
+    b_sds = batch_specs(cfg, shape)
+    b_sh = batch_shardings(cfg, shape, rules)
+    kw = loss_kwargs(scfg)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch, **kw))(state["params"])
+        with jax.named_scope("boundary_opt"):
+            new_params, new_opt, om = adamw.update(
+                grads, state["opt"], state["params"], opt_cfg)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1},
+                {"loss": loss, **om})
+
+    return train_step, (state_sds, b_sds), (state_sh, b_sh)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, rules):
+    """Prefill: full prompt forward + cache write (inference-prefill shapes)."""
+    params_sds, axes = param_structs(cfg)
+    p_sh = shardings_from_axes(axes, rules, params_sds)
+    b_sds = {"tokens": batch_specs(cfg, shape)["tokens"]}
+    if cfg.num_prefix_tokens:
+        b_sds["prefix_embed"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.num_prefix_tokens, cfg.d_model), jnp.float32)
+    b_sh = {k: v for k, v in batch_shardings(cfg, shape, rules).items()
+            if k in b_sds}
+
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, cfg, batch)
+        return logits, caches
+
+    return prefill_step, (params_sds, b_sds), (p_sh, b_sh)
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, rules):
+    """serve_step: one new token against a seq_len KV cache."""
+    params_sds, axes = param_structs(cfg)
+    p_sh = shardings_from_axes(axes, rules, params_sds)
+    B, S = shape.global_batch, shape.seq_len
+
+    cache_sds = jax.eval_shape(
+        lambda: kvcache.init_cache(cfg, B, S,
+                                   jnp.bfloat16 if cfg.dtype == "bfloat16"
+                                   else jnp.float32))
+    cache_ax = kvcache.cache_logical_axes(cfg)
+    c_sh = shardings_from_axes(cache_ax, rules, cache_sds)
+    tok = jax.ShapeDtypeStruct(
+        (B, 1, cfg.num_codebooks) if cfg.num_codebooks else (B, 1), jnp.int32)
+    t_sh = rules.sharding(("batch", None, None) if cfg.num_codebooks
+                          else ("batch", None))
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, tokens, caches, index):
+        return model.decode_step(params, cfg, tokens, caches, index)
+
+    return (serve_step, (params_sds, tok, cache_sds, idx),
+            (p_sh, t_sh, c_sh, rules.sharding(())))
+
+
+def build_cell(arch: str, shape_name: str, rules, scfg=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    scfg = scfg or SentinelConfig(mode="offload",
+                                  mi_periods=default_mi(cfg))
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, rules, scfg)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, rules)
+    return build_decode_cell(cfg, shape, rules)
+
+
+def default_mi(cfg: ModelConfig) -> int:
+    """Paper-faithful default: planner-shaped heuristic (≈1/8 of depth,
+    rounded to a divisor of num_periods). The real planner value comes from
+    benchmarks/bench_planner.py; this keeps the dry-run self-contained."""
+    P = cfg.num_periods
+    target = max(1, P // 8)
+    divs = [d for d in range(1, P + 1) if P % d == 0]
+    return min(divs, key=lambda d: abs(d - target))

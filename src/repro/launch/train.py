@@ -1,0 +1,90 @@
+"""Training CLI: ``python -m repro.launch.train --arch smollm-360m --steps 50``
+
+Runs the full Sentinel pipeline on the local device(s): dynamic profiling
+(one traced step), migration-interval planning, then the fault-tolerant
+training loop with the planned offload config.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_archs
+from repro.core import planner, profiler
+from repro.core.hardware import TPU_V5E
+from repro.core.offload import SentinelConfig, from_plan
+from repro.data.pipeline import DataConfig
+from repro.models import model
+from repro.models.layers import split_params
+from repro.optim import adamw
+from repro.train import loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the smoke-scale config (full scale needs TPU)")
+    ap.add_argument("--mi", type=int, default=0,
+                    help="migration interval override (0 = plan it)")
+    ap.add_argument("--mode", default="offload",
+                    choices=["offload", "save_hbm", "remat", "full"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--fast-frac", type=float, default=0.3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    # ---- Sentinel pipeline: profile -> plan -> configure ----
+    if args.mi:
+        scfg = SentinelConfig(mode=args.mode, mi_periods=args.mi)
+        print(f"[train] MI override: {args.mi} periods")
+    else:
+        params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+        pshapes = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        if cfg.num_codebooks:
+            tok = jax.ShapeDtypeStruct((args.batch, args.seq,
+                                        cfg.num_codebooks), jnp.int32)
+        else:
+            tok = jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32)
+        lab_S = args.seq + (cfg.num_prefix_tokens or 0)
+        b = {"tokens": tok,
+             "labels": jax.ShapeDtypeStruct(
+                 (args.batch, args.seq, cfg.num_codebooks)
+                 if cfg.num_codebooks else (args.batch, lab_S), jnp.int32)}
+        if cfg.num_prefix_tokens:
+            b["prefix_embed"] = jax.ShapeDtypeStruct(
+                (args.batch, cfg.num_prefix_tokens, cfg.d_model), jnp.float32)
+        prof = profiler.trace_profile(
+            jax.grad(lambda p, bb: model.loss_fn(p, cfg, bb,
+                                                 unroll_periods=True)),
+            pshapes, b, num_periods=cfg.num_periods)
+        plan = planner.plan(prof, TPU_V5E, args.fast_frac * prof.peak_bytes())
+        scfg = dataclasses.replace(from_plan(prof, plan), mode=args.mode)
+        print(f"[train] profiled {len(prof.objects)} data objects; "
+              f"planned MI={plan.mi} steps -> {scfg.mi_periods} periods "
+              f"(case3 policy: {'stall' if plan.stall_on_case3 else 'slow'})")
+
+    ocfg = adamw.OptConfig(total_steps=args.steps, warmup_steps=max(1, args.steps // 10))
+    dcfg = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch,
+                      num_codebooks=cfg.num_codebooks,
+                      num_prefix_tokens=cfg.num_prefix_tokens,
+                      d_model=cfg.d_model)
+    tcfg = loop.TrainConfig(steps=args.steps, ckpt_every=max(10, args.steps // 5),
+                            ckpt_dir=args.ckpt_dir, log_every=10)
+    out = loop.run(cfg, tcfg, scfg, ocfg, dcfg)
+    print(f"[train] done; final loss {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Attention: GQA/MQA with causal / sliding-window / prefix-LM masks, logit
+softcap, QK-norm, RoPE, KV caches — plus DeepSeek MLA (compressed latent cache).
+
+One code path serves train (full seq), prefill (full seq + cache write) and
+decode (q_len=1 against a cache). Grouped einsums avoid materializing repeated
+KV heads.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL, MLA
+from repro.models.layers import Param, apply_rope, dense_init, rmsnorm, softcap
+from repro.sharding import constrain
+
+NEG_INF = -2.0 ** 20
+
+
+# ----------------------------------------------------------------- masks ----
+
+def attn_bias(q_pos, kv_pos, *, window: int = 0, prefix_len: int = 0,
+              kv_len_valid=None):
+    """Additive bias (..., Sq, Skv) from position vectors.
+
+    q_pos: (B, Sq) or (Sq,); kv_pos: (Skv,).
+    window > 0: sliding-window causal. prefix_len > 0: bidirectional prefix.
+    kv_len_valid: (B,) number of valid cache entries (decode).
+    """
+    q = q_pos[..., :, None].astype(jnp.int32)
+    k = kv_pos[None, :].astype(jnp.int32)
+    ok = k <= q
+    if window:
+        ok &= (q - k) < window
+    if prefix_len:
+        ok |= k < prefix_len
+    if kv_len_valid is not None:
+        ok &= k < kv_len_valid[..., None, None]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------- GQA ----
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    H, KV, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, ("embed", "heads"), dtype),
+        "wk": dense_init(ks[1], d, KV * hd, ("embed", "kv_heads"), dtype),
+        "wv": dense_init(ks[2], d, KV * hd, ("embed", "kv_heads"), dtype),
+        "wo": dense_init(ks[3], H * hd, d, ("heads", "embed"), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = Param(jnp.ones((hd,), dtype), (None,))
+        p["k_norm"] = Param(jnp.ones((hd,), dtype), (None,))
+    return p
+
+
+def _gqa_core(q, k, v, bias, softcap_val: float):
+    """q: (B,Sq,KV,G,hd); k,v: (B,Skv,KV,hd); bias: (B|1, Sq, Skv)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = softcap(scores, softcap_val)
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out
+
+
+def attention(params, cfg, x, positions, *, kind: str = ATTN,
+              cache: Optional[dict] = None, cache_index=None,
+              theta: Optional[float] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, Sq, d). cache: {"k","v"} fixed (B, Smax, KV, hd) buffers.
+
+    Returns (out, updated_cache). cache_index: scalar write offset (decode).
+    """
+    B, Sq, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    window = cfg.sliding_window if kind == LOCAL else 0
+    if theta is None:
+        theta = cfg.rope_theta if (kind == LOCAL or not cfg.rope_theta_global) \
+            else cfg.rope_theta_global
+
+    q = (x @ params["wq"]).reshape(B, Sq, H, hd)
+    k = (x @ params["wk"]).reshape(B, Sq, KV, hd)
+    v = (x @ params["wv"]).reshape(B, Sq, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    q = q.reshape(B, Sq, KV, G, hd)
+
+    if cache is not None:
+        # cache stores K/V with heads folded (B, Smax, KV*hd) for shardability
+        kf = k.reshape(B, Sq, KV * hd)
+        vf = v.reshape(B, Sq, KV * hd)
+        if cache_index is not None and getattr(cache_index, "ndim", 0) >= 1:
+            # per-slot write offsets (continuous batching): scatter row-wise
+            rows = jnp.arange(B)
+            k_all = cache["k"].at[rows, cache_index].set(kf[:, 0])
+            v_all = cache["v"].at[rows, cache_index].set(vf[:, 0])
+        else:
+            off = cache_index if cache_index is not None else 0
+            k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], kf, off, 1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], vf, off, 1)
+        kv_pos = jnp.arange(k_all.shape[1])
+        bias = attn_bias(positions, kv_pos, window=window,
+                         prefix_len=cfg.num_prefix_tokens if cfg.prefix_lm else 0)
+        new_cache = {"k": constrain(k_all, ("batch", "kv_seq", "kv_heads")),
+                     "v": constrain(v_all, ("batch", "kv_seq", "kv_heads"))}
+        Smax = k_all.shape[1]
+        k_use = k_all.reshape(B, Smax, KV, hd)
+        v_use = v_all.reshape(B, Smax, KV, hd)
+    else:
+        pos = positions[0] if positions.ndim > 1 else positions
+        bias = attn_bias(positions, pos, window=window,
+                         prefix_len=cfg.num_prefix_tokens if cfg.prefix_lm else 0)
+        k_use, v_use, new_cache = k, v, None
+
+    if bias.ndim == 2:
+        bias = bias[None]
+    out = _gqa_core(q, k_use, v_use, bias, cfg.attn_softcap)
+    out = out.reshape(B, Sq, H * hd)
+    out = constrain(out, ("batch", "seq", "heads"))
+    return out @ params["wo"], new_cache
+
+
+# ------------------------------------------------------------------- MLA ----
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.num_heads
+    dn, dr, dv, dc = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, H * (dn + dr), ("embed", "heads"), dtype),
+        "w_dkv": dense_init(ks[1], d, dc, ("embed", None), dtype),
+        "w_krope": dense_init(ks[2], d, dr, ("embed", None), dtype),
+        "w_uk": dense_init(ks[3], dc, H * dn, (None, "heads"), dtype),
+        "w_uv": dense_init(ks[4], dc, H * dv, (None, "heads"), dtype),
+        "wo": dense_init(ks[5], H * dv, d, ("heads", "embed"), dtype),
+    }
+
+
+def mla_attention(params, cfg, x, positions, *, cache: Optional[dict] = None,
+                  cache_index=None, **_) -> Tuple[jax.Array, Optional[dict]]:
+    """DeepSeek-V2 MLA. Cache holds the *compressed* latent (B, S, dc) + shared
+    rope key (B, S, dr) — the paper's KV-cache compression; K/V are expanded
+    from the latent at use time."""
+    B, Sq, d = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, dc = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+
+    q = (x @ params["wq"]).reshape(B, Sq, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ params["w_dkv"]                           # (B,Sq,dc)
+    krope = apply_rope((x @ params["w_krope"])[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]      # (B,Sq,dr) shared head
+
+    if cache is not None:
+        if cache_index is not None and getattr(cache_index, "ndim", 0) >= 1:
+            rows = jnp.arange(B)
+            ckv_all = cache["ckv"].at[rows, cache_index].set(ckv[:, 0])
+            kr_all = cache["krope"].at[rows, cache_index].set(krope[:, 0])
+            kv_pos = jnp.arange(ckv_all.shape[1])
+        elif cache_index is not None:
+            ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, cache_index, 1)
+            kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope, cache_index, 1)
+            kv_pos = jnp.arange(ckv_all.shape[1])
+        else:
+            ckv_all = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, 0, 1)
+            kr_all = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope, 0, 1)
+            kv_pos = jnp.arange(ckv_all.shape[1])
+        new_cache = {"ckv": constrain(ckv_all, ("batch", "kv_seq", None)),
+                     "krope": constrain(kr_all, ("batch", "kv_seq", None))}
+    else:
+        ckv_all, kr_all, new_cache = ckv, krope, None
+        kv_pos = positions[0] if positions.ndim > 1 else positions
+
+    Skv = ckv_all.shape[1]
+    k_nope = (ckv_all @ params["w_uk"]).reshape(B, Skv, H, dn)
+    v = (ckv_all @ params["w_uv"]).reshape(B, Skv, H, dv)
+
+    scale = (dn + dr) ** -0.5
+    scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32)) +
+              jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                         kr_all.astype(jnp.float32))) * scale
+    bias = attn_bias(positions, kv_pos)
+    scores = scores + (bias[None] if bias.ndim == 2 else bias[:, None])
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v).reshape(B, Sq, H * dv)
+    out = constrain(out, ("batch", "seq", "heads"))
+    return out @ params["wo"], new_cache

@@ -1,0 +1,83 @@
+"""Cache construction for serving: per-layer-kind cache buffers, stacked over
+periods to match the scanned layer stack."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL, LSTM, MAMBA, MLA, MLSTM, SHARED_ATTN, SLSTM
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+
+
+def init_layer_cache(cfg, kind: str, batch: int, max_seq: int, dtype):
+    if kind in (ATTN, LOCAL, SHARED_ATTN):
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+        # KV heads folded into one dim so odd head counts (5, 15...) still
+        # shard over the model axis. Sliding-window layers only ever read the
+        # last `window` entries, but we keep the full buffer for uniform
+        # indexing (baseline; see §Perf for the windowed-cache optimization).
+        return {"k": jnp.zeros((batch, max_seq, KV * hd), dtype),
+                "v": jnp.zeros((batch, max_seq, KV * hd), dtype)}
+    if kind == MLA:
+        return {"ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype)}
+    if kind == MAMBA:
+        return ssm_mod.init_mamba_cache(cfg, batch, dtype)
+    if kind == MLSTM:
+        return xlstm_mod.init_mlstm_cache(cfg, batch, dtype)
+    if kind == SLSTM:
+        return xlstm_mod.init_slstm_cache(cfg, batch, dtype)
+    if kind == LSTM:
+        return xlstm_mod.init_lstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Cache pytree matching stack_forward's expectations: prologue caches are
+    per-layer; slot caches carry a leading (num_periods,) dim."""
+    pro = [init_layer_cache(cfg, kind, batch, max_seq, dtype)
+           for kind in cfg.prologue]
+
+    def stacked(kind):
+        one = init_layer_cache(cfg, kind, batch, max_seq, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_periods,) + a.shape).copy()
+            if cfg.num_periods > 1 else a[None], one)
+
+    return {"prologue": pro, "slots": [stacked(k) for k in cfg.period]}
+
+
+def cache_logical_axes(cfg) -> Dict[str, Any]:
+    """Logical sharding axes for every cache leaf (mirrors init_cache)."""
+    def axes_layer(kind):
+        if kind in (ATTN, LOCAL, SHARED_ATTN):
+            return {"k": ("batch", "kv_seq", "kv_heads"),
+                    "v": ("batch", "kv_seq", "kv_heads")}
+        if kind == MLA:
+            return {"ckv": ("batch", "kv_seq", "kv_latent"),
+                    "krope": ("batch", "kv_seq", None)}
+        if kind == MAMBA:
+            return {"h": ("batch", "ssm_heads", None, None),
+                    "conv": ("batch", None, "ssm_heads")}
+        if kind == MLSTM:
+            return {"state": (("batch", "heads", None, None),
+                              ("batch", "heads", None),
+                              ("batch", "heads")),
+                    "conv": ("batch", None, "mlp")}
+        if kind == SLSTM:
+            return {"state": (("batch", "heads", None),) * 2 +
+                             (("batch", "heads", None),) * 2,
+                    "conv": ("batch", None, "mlp")}
+        if kind == LSTM:
+            return {"h": ("batch", "embed"), "c": ("batch", "embed")}
+        raise ValueError(kind)
+
+    from repro.sharding import is_axes_leaf
+    pro = [axes_layer(k) for k in cfg.prologue]
+    slots = [jax.tree.map(lambda ax: ("layers",) + tuple(ax), axes_layer(k),
+                          is_leaf=is_axes_leaf)
+             for k in cfg.period]
+    return {"prologue": pro, "slots": slots}

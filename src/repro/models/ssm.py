@@ -1,0 +1,93 @@
+"""Mamba2 (SSD) block — zamba2's backbone mixer and the long-context decode path.
+
+State per layer: {"h": (B, H, P, N) SSM state, "conv": (B, K-1, d_conv)} where
+d_conv = d_inner + 2N (the conv runs over x, B, C channels as in Mamba2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import Param, dense_init, rmsnorm
+from repro.sharding import constrain
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = s.num_heads or d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.state_dim, s.conv_kernel
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, P, N, K = dims(cfg)
+    d_conv = d_inner + 2 * N
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj emits [z (d_inner) | xBC (d_conv) | dt (H)]
+        "w_in": dense_init(ks[0], d, d_inner + d_conv + H, ("embed", "ssm_heads"), dtype),
+        "conv_w": Param(jax.random.normal(ks[1], (K, d_conv), dtype) * (K ** -0.5),
+                        (None, "ssm_heads")),
+        "conv_b": Param(jnp.zeros((d_conv,), dtype), ("ssm_heads",)),
+        "dt_bias": Param(jnp.zeros((H,), dtype), ("ssm_heads",)),
+        "A_log": Param(jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)), ("ssm_heads",)),
+        "D": Param(jnp.ones((H,), dtype), ("ssm_heads",)),
+        "norm": Param(jnp.ones((d_inner,), dtype), ("ssm_heads",)),
+        "w_out": dense_init(ks[4], d_inner, d, ("ssm_heads", "embed"), dtype),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """x: (B, S, C); w: (K, C) depthwise; tail: (B, K-1, C) left context."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b), xp[:, -(K - 1):]
+
+
+def mamba_block(params, cfg, x, *, cache: Optional[dict] = None,
+                decode: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, d) -> (out, new_cache). decode=True requires S == 1."""
+    B, S, d = x.shape
+    d_inner, H, P, N, K = dims(cfg)
+    d_conv = d_inner + 2 * N
+
+    zxd = x @ params["w_in"]
+    z, xBC, dt = jnp.split(zxd, [d_inner, d_inner + d_conv], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])              # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # (H,)
+
+    tail = cache["conv"] if cache is not None and decode else None
+    xBC, new_tail = _causal_conv(xBC, params["conv_w"], params["conv_b"], tail)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    xh = xs.reshape(B, S, H, P)
+    xh = constrain(xh, ("batch", "seq", "ssm_heads", None))
+
+    if decode:
+        y, h = kops.ssd_decode(cache["h"], xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
+        y = y[:, None]
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h = kops.ssd(xh, dt, A, Bm, Cm, chunk=cfg.ssm.chunk, h0=h0)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, d_inner)
+
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    new_cache = None
+    if cache is not None or decode:
+        new_cache = {"h": constrain(h, ("batch", "ssm_heads", None, None)),
+                     "conv": new_tail}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32):
+    d_inner, H, P, N, K = dims(cfg)
+    return {"h": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, d_inner + 2 * N), dtype)}

@@ -1,0 +1,173 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar memory,
+true recurrence) — per xLSTM [arXiv:2405.04517]; 7:1 pattern for xlstm-1.3b.
+
+The assigned config has d_ff=0: blocks carry their own up/down projections
+(projection factor 2 for mLSTM), no separate MLP.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import Param, dense_init, rmsnorm
+from repro.models.ssm import _causal_conv
+from repro.sharding import constrain
+
+CONV_K = 4
+PROJ = 2          # mLSTM up-projection factor
+QK_FACTOR = 2     # qk dim = d_inner // QK_FACTOR (official qk_dim_factor=0.5)
+
+
+def mlstm_dims(cfg):
+    d_inner = PROJ * cfg.d_model
+    H = cfg.num_heads
+    dv = d_inner // H
+    dk = d_inner // QK_FACTOR // H
+    return d_inner, H, dk, dv
+
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, dk, dv = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], d, d_inner, ("embed", "mlp"), dtype),
+        "w_gate": dense_init(ks[1], d, d_inner, ("embed", "mlp"), dtype),
+        "conv_w": Param(jax.random.normal(ks[2], (CONV_K, d_inner), dtype) * 0.5,
+                        (None, "mlp")),
+        "conv_b": Param(jnp.zeros((d_inner,), dtype), ("mlp",)),
+        "wq": dense_init(ks[3], d_inner, H * dk, ("mlp", "heads"), dtype),
+        "wk": dense_init(ks[4], d_inner, H * dk, ("mlp", "heads"), dtype),
+        "wv": dense_init(ks[5], d_inner, H * dv, ("mlp", "heads"), dtype),
+        "w_if": dense_init(ks[6], d_inner, 2 * H, ("mlp", None), dtype),
+        "norm": Param(jnp.ones((d_inner,), dtype), ("mlp",)),
+        "w_down": dense_init(jax.random.fold_in(key, 7), d_inner, d,
+                             ("mlp", "embed"), dtype),
+    }
+
+
+def mlstm_block(params, cfg, x, *, cache: Optional[dict] = None,
+                decode: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    d_inner, H, dk, dv = mlstm_dims(cfg)
+
+    xm = x @ params["w_up"]
+    z = x @ params["w_gate"]
+    tail = cache["conv"] if cache is not None and decode else None
+    xc, new_tail = _causal_conv(xm, params["conv_w"], params["conv_b"], tail)
+
+    q = (xc @ params["wq"]).reshape(B, S, H, dk)
+    k = (xc @ params["wk"]).reshape(B, S, H, dk)
+    v = (xm @ params["wv"]).reshape(B, S, H, dv)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    gates = (xc @ params["w_if"]).astype(jnp.float32)
+    log_i = gates[..., :H]
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+
+    state = cache["state"] if cache is not None else None
+    h, new_state = kops.mlstm(q, k, v, log_i, log_f, state=state)
+    h = h.reshape(B, S, d_inner)
+    h = rmsnorm(h, params["norm"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+
+    new_cache = None
+    if cache is not None or decode:
+        new_cache = {"state": new_state, "conv": new_tail}
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg, batch: int, dtype=jnp.float32):
+    d_inner, H, dk, dv = mlstm_dims(cfg)
+    return {"state": (jnp.zeros((batch, H, dk, dv), jnp.float32),
+                      jnp.zeros((batch, H, dk), jnp.float32),
+                      jnp.full((batch, H), -jnp.inf, jnp.float32)),
+            "conv": jnp.zeros((batch, CONV_K - 1, d_inner), dtype)}
+
+
+# ----------------------------------------------------------------- sLSTM ----
+
+def slstm_dims(cfg):
+    H = cfg.num_heads
+    return H, cfg.d_model // H
+
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H, D = slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "conv_w": Param(jax.random.normal(ks[0], (CONV_K, d), dtype) * 0.5, (None, "mlp")),
+        "conv_b": Param(jnp.zeros((d,), dtype), ("mlp",)),
+        "w_ifzo": dense_init(ks[1], d, H * 4 * D, ("embed", "heads"), dtype),
+        "r_ifzo": Param(jax.random.normal(ks[2], (H, 4, D, D), dtype) * (D ** -0.5),
+                        ("heads", None, None, None)),
+        "norm": Param(jnp.ones((d,), dtype), ("mlp",)),
+        "w_out": dense_init(ks[3], d, d, ("embed", "embed"), dtype),
+    }
+
+
+def slstm_block(params, cfg, x, *, cache: Optional[dict] = None,
+                decode: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    H, D = slstm_dims(cfg)
+    tail = cache["conv"] if cache is not None and decode else None
+    xc, new_tail = _causal_conv(x, params["conv_w"], params["conv_b"], tail)
+    pre = (xc @ params["w_ifzo"]).reshape(B, S, H, 4, D)
+    state = cache["state"] if cache is not None else None
+    h, new_state = kops.slstm(pre, state=state, r_ifzo=params["r_ifzo"])
+    h = h.reshape(B, S, d)
+    out = rmsnorm(h, params["norm"], cfg.norm_eps) @ params["w_out"]
+    new_cache = None
+    if cache is not None or decode:
+        new_cache = {"state": new_state, "conv": new_tail}
+    return out, new_cache
+
+
+def init_slstm_cache(cfg, batch: int, dtype=jnp.float32):
+    H, D = slstm_dims(cfg)
+    z = jnp.zeros((batch, H, D), jnp.float32)
+    return {"state": (z, z, jnp.full((batch, H, D), -jnp.inf, jnp.float32), z),
+            "conv": jnp.zeros((batch, CONV_K - 1, cfg.d_model), dtype)}
+
+
+# ------------------------------------------------------------ classic LSTM --
+
+def init_lstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": dense_init(k1, 2 * d, 4 * d, ("embed", "heads"), dtype),
+        "b": Param(jnp.zeros((4 * d,), dtype), ("heads",)),
+    }
+
+
+def lstm_block(params, cfg, x, *, cache=None, decode: bool = False):
+    """Classic LSTM (the paper's PTB model). cache: {"h","c"} (B, d)."""
+    B, S, d = x.shape
+    if cache is not None:
+        h0, c0 = cache["h"], cache["c"]
+    else:
+        h0 = jnp.zeros((B, d), x.dtype)
+        c0 = jnp.zeros((B, d), jnp.float32)
+
+    def step(carry, xt):
+        h, c = carry
+        gates = jnp.concatenate([xt, h], axis=-1) @ params["w"] + params["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f).astype(jnp.float32) * c + \
+            (jax.nn.sigmoid(i) * jnp.tanh(g)).astype(jnp.float32)
+        h = (jax.nn.sigmoid(o) * jnp.tanh(c).astype(x.dtype))
+        return (h, c), h
+
+    (h, c), hs = jax.lax.scan(step, (h0, c0), x.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1)
+    new_cache = {"h": h, "c": c} if (cache is not None or decode) else None
+    return out, new_cache
+
+
+def init_lstm_cache(cfg, batch: int, dtype=jnp.float32):
+    return {"h": jnp.zeros((batch, cfg.d_model), dtype),
+            "c": jnp.zeros((batch, cfg.d_model), jnp.float32)}

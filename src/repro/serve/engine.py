@@ -1,0 +1,161 @@
+"""Batched serving engine: prefill + lockstep decode with KV caches.
+
+``serve_step`` (one token for the whole batch against a filled cache) is the
+function the decode-shape dry-run cells lower; ``generate`` drives it for the
+examples/benchmarks with greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache, model
+
+
+@dataclass
+class ServeConfig:
+    max_seq: int = 2048
+    temperature: float = 0.0     # 0 = greedy
+    eos_id: int = -1             # -1: never stop early
+
+
+def make_prefill(cfg):
+    def prefill(params, batch):
+        return model.prefill(params, cfg, batch)
+    return jax.jit(prefill)
+
+
+def make_serve_step(cfg):
+    """(params, tokens(B,1[,K]), caches, index) -> (logits, caches)."""
+    def step(params, tokens, caches, index):
+        return model.decode_step(params, cfg, tokens, caches, index)
+    return jax.jit(step, donate_argnums=(2,))
+
+
+def sample(logits, key, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching: a fixed B-slot decode batch; finished
+    or empty slots are refilled from a request queue via per-slot prefill
+    (cache splice), so decode throughput never waits for stragglers.
+
+    All slots decode in lockstep against per-slot lengths (the flash-decode
+    kernel and the jnp path both mask by `lengths`), which is the standard
+    TPU-friendly formulation of continuous batching.
+    """
+
+    def __init__(self, params, cfg, batch_slots: int, max_seq: int,
+                 scfg: Optional[ServeConfig] = None):
+        from repro.models import kvcache
+        self.params, self.cfg = params, cfg
+        self.B, self.max_seq = batch_slots, max_seq
+        self.scfg = scfg or ServeConfig(max_seq=max_seq)
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.caches = kvcache.init_cache(cfg, batch_slots, max_seq, dt)
+        self.lengths = jnp.zeros((batch_slots,), jnp.int32)
+        self.active = [False] * batch_slots
+        self.budget = [0] * batch_slots         # tokens left to generate
+        self.last_tok = jnp.zeros((batch_slots,), jnp.int32)
+        self.outputs = [[] for _ in range(batch_slots)]
+        self.queue: list = []
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, cfg, b, max_seq=max_seq))
+
+    def submit(self, tokens, num_tokens: int):
+        self.queue.append((tokens, num_tokens))
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.active[slot] or not self.queue:
+                continue
+            tokens, budget = self.queue.pop(0)
+            S = tokens.shape[-1]
+            last, fresh = self._prefill(self.params,
+                                        {"tokens": tokens[None]})
+            # splice this request's prefilled cache row into the batch cache
+            self.caches = jax.tree.map(
+                lambda big, one: big.at[:, slot].set(one[:, 0])
+                if big.ndim >= 2 and big.shape[1] == self.B
+                else big.at[slot].set(one[0]),
+                self.caches, fresh)
+            self.lengths = self.lengths.at[slot].set(S)
+            self.last_tok = self.last_tok.at[slot].set(
+                jnp.argmax(last[0, :self.cfg.vocab_size]).astype(jnp.int32))
+            self.active[slot] = True
+            self.budget[slot] = budget
+            self.outputs[slot] = [int(self.last_tok[slot])]
+            self.budget[slot] -= 1
+
+    def step(self):
+        """One lockstep decode step across all active slots — each slot writes
+        its KV at its own length (vector cache_index -> row-wise scatter)."""
+        self._admit()
+        if not any(self.active):
+            return False
+        logits, self.caches, _ = model.forward(
+            self.params, self.cfg, {"tokens": self.last_tok[:, None]},
+            caches=self.caches, cache_index=self.lengths,
+            decode=True)
+        tok = jnp.argmax(logits[:, -1, :self.cfg.vocab_size], axis=-1) \
+            .astype(jnp.int32)
+        self.last_tok = tok
+        self.lengths = self.lengths + jnp.asarray(
+            [1 if a else 0 for a in self.active], jnp.int32)
+        for slot in range(self.B):
+            if not self.active[slot]:
+                continue
+            self.outputs[slot].append(int(tok[slot]))
+            self.budget[slot] -= 1
+            if self.budget[slot] <= 0 or \
+                    int(tok[slot]) == self.scfg.eos_id:
+                self.active[slot] = False
+        return True
+
+    def run(self):
+        results = []
+        while self.queue or any(self.active):
+            done_before = [(i, o) for i, (a, o) in
+                           enumerate(zip(self.active, self.outputs)) if not a]
+            if not self.step():
+                break
+            for i in range(self.B):
+                if not self.active[i] and self.outputs[i]:
+                    results.append(self.outputs[i])
+                    self.outputs[i] = []
+        return results
+
+
+def generate(params, cfg, prompts, num_tokens: int,
+             scfg: Optional[ServeConfig] = None, key=None):
+    """prompts: {"tokens": (B, S)[, "prefix_embed"]}. Returns (B, num_tokens)."""
+    scfg = scfg or ServeConfig()
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B = prompts["tokens"].shape[0]
+    S = prompts["tokens"].shape[1] + (cfg.num_prefix_tokens
+                                      if "prefix_embed" in prompts else 0)
+    max_seq = max(scfg.max_seq, S + num_tokens)
+
+    last_logits, caches = model.prefill(params, cfg, prompts, max_seq=max_seq)
+    step_fn = make_serve_step(cfg)
+
+    outs = []
+    if cfg.num_codebooks:
+        last_logits = last_logits.reshape(B, cfg.num_codebooks, -1)
+    tok = sample(last_logits[..., :cfg.vocab_size], key, scfg.temperature)
+    for i in range(num_tokens):
+        outs.append(tok)
+        feed = tok[:, None] if not cfg.num_codebooks else tok[:, None, :]
+        logits, caches = step_fn(params, feed.astype(jnp.int32), caches,
+                                 jnp.asarray(S + i, jnp.int32))
+        key, sub = jax.random.split(key)
+        if cfg.num_codebooks:
+            logits = logits.reshape(B, cfg.num_codebooks, -1)
+        tok = sample(logits[..., :cfg.vocab_size], sub, scfg.temperature)
+    return jnp.stack(outs, axis=1)

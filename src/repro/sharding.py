@@ -1,0 +1,188 @@
+"""Logical-axis sharding: model code names axes, the launcher maps them to mesh axes.
+
+Model code calls ``constrain(x, ("batch", "seq", "embed"))``; under an active
+``AxisRules`` context this becomes ``lax.with_sharding_constraint`` with the
+mapped ``PartitionSpec``; with no context it is a no-op (CPU unit tests).
+
+Param shardings are derived from the same rules via ``param_spec`` using the
+logical axes each initializer attaches (see models/layers.py ``LOGICAL_AXES``).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes annotation: tuple of axis names / None."""
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+class AxisRules:
+    """Maps logical axis names -> mesh axis name(s) or None (replicated)."""
+
+    def __init__(self, mesh: Mesh, rules: Mapping[str, object]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical axes. With a concrete shape, entries
+        whose mesh-axis product doesn't divide the dim are dropped *before*
+        marking the mesh axis used — so e.g. a 16-way model axis skipped on a
+        40-expert dim remains available for the per-expert hidden dim."""
+        out = []
+        used = set()
+        for i, ax in enumerate(logical):
+            m = self.rules.get(ax) if ax is not None else None
+            if m is None:
+                out.append(None)
+                continue
+            # a list rule holds fallback candidates (tried in order); a tuple
+            # is a single joint-axes mapping
+            candidates = m if isinstance(m, list) else [m]
+            chosen = None
+            for cand in candidates:
+                key = tuple(cand) if isinstance(cand, tuple) else (cand,)
+                if any(k in used for k in key):
+                    continue
+                if shape is not None:
+                    size = 1
+                    for a in key:
+                        size *= self.mesh.shape[a]
+                    if shape[i] % size != 0:
+                        continue
+                chosen = cand
+                used.update(key)
+                break
+            out.append(chosen)
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+def _divisible(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh-axis product doesn't divide the dim."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if dim % size == 0 else None)
+    return P(*out)
+
+
+def sharding_for(shape: Tuple[int, ...], logical: Sequence[Optional[str]],
+                 rules: AxisRules) -> NamedSharding:
+    """NamedSharding for a concrete shape: logical axes mapped through the
+    rules, dropping any entry whose mesh-axis product doesn't divide the dim
+    (e.g. 40 experts on a 16-way model axis, kv_heads=5)."""
+    return NamedSharding(rules.mesh, rules.spec(logical, shape))
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]):
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def param_spec(path: Tuple[str, ...], leaf_logical: Sequence[Optional[str]],
+               shape: Tuple[int, ...], rules: AxisRules) -> NamedSharding:
+    spec = _divisible(shape, rules.spec(leaf_logical), rules.mesh)
+    return NamedSharding(rules.mesh, spec)
+
+
+# Default logical->mesh rule sets ------------------------------------------------
+
+def tp_dp_rules(mesh: Mesh, fsdp: bool = False, seq_parallel: bool = False,
+                dp_only: bool = False) -> AxisRules:
+    """Megatron TP over 'model', DP over ('pod','data') (pod axis optional).
+
+    fsdp=True additionally shards the big param dim over the data axes
+    (ZeRO-3 style; XLA inserts the all-gathers).
+    seq_parallel=True shards the residual-stream sequence dim over 'model'
+    (Megatron-SP): per-layer activation all-gathers become reduce-scatter/
+    all-gather pairs on 1/16 the payload.
+    dp_only=True folds the model axis into data parallelism (small models:
+    no TP collectives at all, grads all-reduce only).
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    if dp_only:
+        full = data_axes + (("model",) if "model" in mesh.shape else ())
+        # fallback chain: widest DP product that divides the batch
+        cands = [full[i:] for i in range(len(full))] + \
+                [full[:j] for j in range(len(full) - 1, 0, -1)]
+        r = {k: None for k in ("seq", "seq_res", "embed", "heads", "kv_heads",
+                               "head_dim", "mlp", "vocab", "experts",
+                               "expert_mlp", "kv_latent", "fsdp", "kv_seq",
+                               "ssm_heads", "ssm_state", "layers", "capacity")}
+        r["batch"] = cands
+        return AxisRules(mesh, r)
+    rules = {
+        "batch": data,
+        "seq": None,
+        # residual-stream sequence dim (block boundaries + embeddings):
+        # sharding it over 'model' is Megatron-SP — per-layer TP all-gathers
+        # become reduce-scatter/all-gather pairs on 1/TP the payload
+        "seq_res": "model" if seq_parallel else None,
+        # FSDP: the d_model dim of *weights* shards over the data axes
+        # (ZeRO-3); "embed" appears in activation constraints too, where the
+        # dedup-vs-batch logic drops it (batch already uses the data axes)
+        "embed": data if fsdp else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": "model",   # used when the expert dim can't shard (EP
+                                 # falls back to TP-within-expert)
+        "kv_latent": "model",    # MLA compressed cache
+        "fsdp": data if fsdp else None,
+        # decode-time sequence parallelism (KV cache length); enabled by
+        # serve rules below, replicated under training rules
+        "kv_seq": None,
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "layers": None,
+        "capacity": None,
+    }
+    return AxisRules(mesh, rules)
+
+
+def serve_rules(mesh: Mesh, seq_shard: bool = False) -> AxisRules:
+    """Inference rules: optionally shard the KV cache over data axes (long ctx)."""
+    r = tp_dp_rules(mesh)
+    if seq_shard:
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        r.rules["kv_seq"] = data_axes if len(data_axes) > 1 else data_axes[0]
+        r.rules["batch"] = None
+    return r

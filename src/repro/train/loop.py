@@ -1,0 +1,106 @@
+"""Training loop: step factory + fault-tolerant runner.
+
+``make_train_step`` builds the jitted (state, batch) -> (state, metrics) step
+with Sentinel offload and sharding applied; ``run`` drives it with periodic
+checkpoints, retry-on-failure (replaying the deterministic pipeline), and
+straggler detection via step-time EWMA.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core.offload import SentinelConfig, loss_kwargs
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import model
+from repro.models.layers import split_params
+from repro.optim import adamw
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    max_retries: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0   # step slower than factor*EWMA -> warn
+
+
+def make_train_step(cfg, scfg: SentinelConfig, opt_cfg: adamw.OptConfig,
+                    donate: bool = True) -> Callable:
+    kw = loss_kwargs(scfg)
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch, **kw))(state["params"])
+        with jax.named_scope("boundary_opt"):
+            new_params, new_opt, om = adamw.update(
+                grads, state["opt"], state["params"], opt_cfg)
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def init_state(key, cfg, opt_cfg: adamw.OptConfig):
+    params, axes = split_params(model.init_params(key, cfg))
+    return {"params": params, "opt": adamw.init(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}, axes
+
+
+def run(cfg, tcfg: TrainConfig, scfg: SentinelConfig,
+        opt_cfg: adamw.OptConfig, dcfg: DataConfig,
+        state=None, step_fn=None, log: Callable = print) -> Dict[str, Any]:
+    """Fault-tolerant loop. Any step that raises is retried after restoring
+    the latest checkpoint (the deterministic pipeline replays identical
+    batches, so recovery is bit-exact)."""
+    if state is None:
+        state, _ = init_state(jax.random.PRNGKey(dcfg.seed), cfg, opt_cfg)
+    step_fn = step_fn or make_train_step(cfg, scfg, opt_cfg)
+
+    start = ckpt.latest_step(tcfg.ckpt_dir)
+    if start is not None:
+        state = ckpt.restore(state, tcfg.ckpt_dir, start)
+        log(f"[train] resumed from step {start}")
+
+    ewma = None
+    retries = 0
+    history = []
+    step = int(state["step"])
+    while step < tcfg.steps:
+        batch = make_batch(dcfg, step)
+        t0 = time.perf_counter()
+        try:
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+        except Exception as e:  # node failure / OOM: restore + retry
+            retries += 1
+            if retries > tcfg.max_retries:
+                raise
+            log(f"[train] step {step} failed ({type(e).__name__}); "
+                f"retry {retries}/{tcfg.max_retries}")
+            last = ckpt.latest_step(tcfg.ckpt_dir)
+            if last is not None:
+                state = ckpt.restore(state, tcfg.ckpt_dir, last)
+                step = int(state["step"])
+            continue
+        dt = time.perf_counter() - t0
+        ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        if dt > tcfg.straggler_factor * ewma and step > 3:
+            log(f"[train] straggler: step {step} took {dt:.3f}s "
+                f"(ewma {ewma:.3f}s)")
+        step = int(state["step"])
+        history.append(float(metrics["loss"]))
+        if step % tcfg.log_every == 0:
+            log(f"[train] step {step} loss {float(metrics['loss']):.4f} "
+                f"({dt*1e3:.1f} ms)")
+        if tcfg.ckpt_every and step % tcfg.ckpt_every == 0:
+            ckpt.save(state, tcfg.ckpt_dir, step)
+    return {"state": state, "losses": history}

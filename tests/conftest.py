@@ -1,0 +1,35 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: no XLA_FLAGS device forcing here — smoke tests and benches must see
+# exactly 1 device (the dry-run sets 512 in its own process).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_batch(cfg, key, B=2, S=16):
+    """Batch matching an arch's modality (codebooks / vlm prefix)."""
+    if cfg.num_codebooks:
+        toks = jax.random.randint(key, (B, S, cfg.num_codebooks), 0,
+                                  cfg.vocab_size)
+        labels = toks
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        labels = toks
+    batch = {"tokens": toks.astype(jnp.int32)}
+    if cfg.num_codebooks:
+        batch["labels"] = labels.astype(jnp.int32)
+    else:
+        batch["labels"] = labels.astype(jnp.int32)
+    if cfg.num_prefix_tokens:
+        batch["prefix_embed"] = jax.random.normal(
+            key, (B, cfg.num_prefix_tokens, cfg.d_model), jnp.float32)
+        batch["labels"] = jnp.pad(batch["labels"],
+                                  ((0, 0), (cfg.num_prefix_tokens, 0)))
+    return batch

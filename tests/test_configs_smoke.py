@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU, asserting output shapes and no NaNs. (Full configs are exercised only
+via the dry-run — ShapeDtypeStructs, no allocation.)"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import tiny_batch
+from repro.configs.base import SHAPES, cells, get_config, list_archs
+from repro.core.offload import SentinelConfig
+from repro.models import model
+from repro.models.layers import split_params
+from repro.optim import adamw
+
+ARCHS = list_archs()
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 11  # 10 assigned + lstm-ptb (paper's own)
+    assert set(ARCHS) >= {
+        "smollm-360m", "gemma3-12b", "internlm2-1.8b", "gemma2-2b",
+        "granite-moe-3b-a800m", "deepseek-v2-lite-16b", "zamba2-7b",
+        "xlstm-1.3b", "musicgen-medium", "paligemma-3b", "lstm-ptb"}
+
+
+def test_cell_count():
+    all_cells = cells(include_skips=True)
+    assert len(all_cells) == 40
+    skips = [c for c in all_cells if c[2]]
+    assert len(skips) == 6       # pure-full-attention archs skip long_500k
+    assert all(c[1] == "long_500k" for c in skips)
+
+
+def test_full_configs_match_assignment():
+    c = get_config("gemma3-12b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (48, 3840, 16, 8, 15360, 262144)
+    assert c.period.count("attn") == 1 and c.period.count("local") == 5
+    d = get_config("deepseek-v2-lite-16b")
+    assert d.kv_lora_rank == 512 and d.moe.num_experts == 64 \
+        and d.moe.experts_per_token == 6 and d.moe.num_shared_experts == 2
+    g = get_config("granite-moe-3b-a800m")
+    assert g.moe.num_experts == 40 and g.moe.experts_per_token == 8
+    z = get_config("zamba2-7b")
+    assert z.num_layers == 81 and z.ssm.state_dim == 64
+    x = get_config("xlstm-1.3b")
+    assert x.d_ff == 0 and x.period.count("mlstm") == 7
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    params, _ = split_params(model.init_params(rng, cfg))
+    batch = tiny_batch(cfg, rng)
+
+    logits, _, aux = jax.jit(
+        lambda p, b: model.forward(p, cfg, b))(params, batch)
+    B = batch["tokens"].shape[0]
+    S = batch["tokens"].shape[1] + (cfg.num_prefix_tokens or 0)
+    if cfg.num_codebooks:
+        assert logits.shape == (B, S, cfg.num_codebooks, cfg.padded_vocab)
+    else:
+        assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    # one full train step (grad + adamw update): finite loss, finite params
+    ocfg = adamw.OptConfig(total_steps=10, warmup_steps=1)
+    opt = adamw.init(params, ocfg)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: model.loss_fn(p, cfg, batch)))(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+    new_params, _, m = adamw.update(grads, opt, params, ocfg)
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.isfinite(leaf).all()), f"{arch}: non-finite params"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "lstm-ptb"])
+def test_smoke_decode(arch, rng):
+    cfg = get_config(arch).reduced()
+    params, _ = split_params(model.init_params(rng, cfg))
+    batch = tiny_batch(cfg, rng, B=2, S=8)
+    batch.pop("labels")
+    last, caches = model.prefill(params, cfg, batch, max_seq=12)
+    tok = (jnp.zeros((2, 1, cfg.num_codebooks), jnp.int32)
+           if cfg.num_codebooks else jnp.zeros((2, 1), jnp.int32))
+    idx = jnp.asarray(8 + (cfg.num_prefix_tokens or 0), jnp.int32)
+    logits, caches2 = model.decode_step(params, cfg, tok, caches, idx)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_sentinel_modes_agree(rng):
+    """offload / save_hbm / remat / full must be numerically identical —
+    the reserved-pool recompute changes memory, never math."""
+    cfg = get_config("smollm-360m").reduced()
+    params, _ = split_params(model.init_params(rng, cfg))
+    batch = tiny_batch(cfg, rng)
+    vals = {}
+    for mode in ["full", "remat", "save_hbm", "offload"]:
+        scfg = SentinelConfig(mode=mode, mi_periods=2)
+        from repro.core.offload import loss_kwargs
+        loss, grads = jax.jit(jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch, **loss_kwargs(scfg))))(params)
+        vals[mode] = (loss, grads)
+    for mode in ["remat", "save_hbm", "offload"]:
+        assert jnp.allclose(vals["full"][0], vals[mode][0], rtol=1e-5), mode
+        for a, b in zip(jax.tree.leaves(vals["full"][1]),
+                        jax.tree.leaves(vals[mode][1])):
+            assert jnp.allclose(a, b, rtol=1e-4, atol=1e-5), mode

@@ -1,0 +1,65 @@
+"""Roofline-measurement layer: jaxpr trip-aware costing + HLO collective
+parsing (the §Roofline methodology is itself under test)."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.costing import jaxpr_cost
+
+
+def test_scan_trip_counts_multiply():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=8)
+        return c.sum()
+
+    jx = jax.make_jaxpr(f)(jnp.ones((64, 64)), jnp.ones((64, 64)))
+    cost = jaxpr_cost(jx)
+    one = 2 * 64 ** 3
+    assert abs(cost["matmul_flops"] - 8 * one) / (8 * one) < 0.01
+
+
+def test_nested_scan_trips():
+    def f(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+        c, _ = jax.lax.scan(outer, x, None, length=3)
+        return c.sum()
+
+    jx = jax.make_jaxpr(f)(jnp.ones((32, 32)), jnp.ones((32, 32)))
+    cost = jaxpr_cost(jx)
+    one = 2 * 32 ** 3
+    assert abs(cost["matmul_flops"] - 12 * one) / (12 * one) < 0.01
+
+
+def test_grad_includes_backward_flops():
+    def f(w, x):
+        return jnp.sum(jnp.tanh(x @ w))
+
+    x = jnp.ones((64, 64))
+    fwd = jaxpr_cost(jax.make_jaxpr(f)(x, x))["matmul_flops"]
+    bwd = jaxpr_cost(jax.make_jaxpr(jax.grad(f))(x, x))["matmul_flops"]
+    assert bwd >= 1.9 * fwd  # fwd + dW matmul (x is not differentiated)
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """\
+%wide.region_1 (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %ar = f32[16,128]{1,0} all-reduce(%x), to_apply=%add
+}
+ENTRY %main (p0: f32[256]) -> f32[256] {
+  %ag = bf16[1024]{0} all-gather(%y), dimensions={0}
+  %ar2 = f32[256]{0} all-reduce(%z), to_apply=%add.clone_promoted
+}
+"""
+    out = collective_bytes(hlo, loop_trips=10.0)
+    assert out["counts"]["all-reduce"] == 2
+    assert out["counts"]["all-gather"] == 1
+    # loop-body AR x10 trips; ENTRY AG x1; promoted ENTRY AR halved
+    assert out["bytes"]["all-reduce"] == 16 * 128 * 4 * 10 + 256 * 4 * 0.5
+    assert out["bytes"]["all-gather"] == 1024 * 2

@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2 import ssd
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KVH,D", [
+    (2, 128, 128, 4, 2, 64),
+    (1, 64, 256, 8, 8, 32),
+    (2, 100, 100, 6, 2, 64),      # non-block-multiple seq
+    (1, 1, 160, 4, 1, 64),        # single query
+    (1, 32, 32, 2, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(B, Sq, Skv, H, KVH, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KVH, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KVH, D), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    assert jnp.max(jnp.abs(out.astype(jnp.float32) -
+                           want.astype(jnp.float32))) < tol
+
+
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (16, 0.0), (0, 50.0),
+                                        (8, 30.0)])
+def test_flash_attention_window_softcap(window, cap):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    out = flash_attention(q, k, v, window=window, softcap_val=cap,
+                          block_q=16, block_k=16, interpret=True)
+    want = ref.attention_ref(q, k, v, window=window, softcap_val=cap)
+    assert jnp.max(jnp.abs(out - want)) < 1e-4
+
+
+@pytest.mark.parametrize("B,S,H,KVH,D,w", [
+    (2, 256, 8, 2, 64, 0), (1, 100, 4, 4, 32, 0), (3, 512, 8, 1, 64, 64),
+    (2, 64, 16, 8, 128, 16),
+])
+def test_decode_attention_matches_oracle(B, S, H, KVH, D, w):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kc = jax.random.normal(ks[1], (B, S, KVH, D))
+    vc = jax.random.normal(ks[2], (B, S, KVH, D))
+    lengths = jnp.array([S // 2 + 3 * i + 1 for i in range(B)], jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, window=w, block_k=64,
+                           interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths, window=w)
+    assert jnp.max(jnp.abs(out - want)) < 1e-4
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 64, 4, 16, 16, 16), (1, 128, 8, 32, 64, 32), (2, 96, 2, 8, 32, 32),
+])
+def test_ssd_kernel_matches_sequential_oracle(B, S, H, P, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    y0, h0 = ref.ssd_ref(x, dt, A, Bm, Cm)
+    y1, h1 = ref.ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    y2, h2 = ssd(x, dt, A, Bm, Cm, chunk=chunk, block_heads=min(2, H),
+                 interpret=True)
+    assert jnp.max(jnp.abs(y0 - y1)) < 1e-3
+    assert jnp.max(jnp.abs(y0 - y2)) < 1e-3
+    assert jnp.max(jnp.abs(h0 - h1)) < 1e-3
+    assert jnp.max(jnp.abs(h0 - h2)) < 1e-3
+
+
+def test_ssd_decode_continues_scan():
+    """prefill state -> decode steps == one long scan."""
+    ks = jax.random.split(KEY, 5)
+    B, S, H, P, N = 1, 32, 2, 8, 16
+    x = jax.random.normal(ks[0], (B, S + 4, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S + 4, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S + 4, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S + 4, N)) * 0.5
+    y_all, _ = ref.ssd_ref(x, dt, A, Bm, Cm)
+    _, h = ref.ssd_ref(x[:, :S], dt[:, :S], A, Bm[:, :S], Cm[:, :S])
+    for t in range(S, S + 4):
+        y_t, h = ref.ssd_decode_ref(h, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        assert jnp.max(jnp.abs(y_t - y_all[:, t])) < 1e-4
+
+
+def test_mlstm_stability_long_sequence():
+    """Stabilized gates: no overflow even with extreme input-gate logits."""
+    ks = jax.random.split(KEY, 5)
+    B, S, H, Dk, Dv = 1, 64, 2, 8, 8
+    q = jax.random.normal(ks[0], (B, S, H, Dk))
+    k = jax.random.normal(ks[1], (B, S, H, Dk))
+    v = jax.random.normal(ks[2], (B, S, H, Dv))
+    log_i = jax.random.normal(ks[3], (B, S, H)) * 10.0   # extreme
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)))
+    h, (C, n, m) = ref.mlstm_ref(q, k, v, log_i, log_f)
+    assert bool(jnp.isfinite(h).all())
+    assert bool(jnp.isfinite(C).all())
+
+
+@pytest.mark.parametrize("B,S,H,Dk,Dv,chunk", [
+    (2, 64, 2, 8, 16, 16), (1, 128, 4, 16, 16, 32), (2, 96, 3, 8, 8, 8),
+])
+def test_mlstm_chunked_matches_sequential(B, S, H, Dk, Dv, chunk):
+    """Chunkwise-parallel mLSTM (the xlstm §Perf lever) == sequential scan."""
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, Dk))
+    k = jax.random.normal(ks[1], (B, S, H, Dk))
+    v = jax.random.normal(ks[2], (B, S, H, Dv))
+    li = jax.random.normal(ks[3], (B, S, H)) * 2
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, S, H)) + 1)
+    h0, s0 = ref.mlstm_ref(q, k, v, li, lf)
+    h1, s1 = ref.mlstm_chunked_ref(q, k, v, li, lf, chunk=chunk)
+    assert jnp.max(jnp.abs(h0 - h1)) < 2e-4
+    # states are stabilizer-scaled; compare through a continuation run
+    h0c, _ = ref.mlstm_ref(q, k, v, li, lf, state=s0)
+    h1c, _ = ref.mlstm_ref(q, k, v, li, lf, state=s1)
+    assert jnp.max(jnp.abs(h0c - h1c)) < 2e-4
+
+
+def test_slstm_finite_and_recurrent():
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (2, 32, 2, 4, 8))
+    r = jax.random.normal(ks[1], (2, 4, 8, 8)) * 0.1
+    h, state = ref.slstm_ref(x, r_ifzo=r)
+    assert h.shape == (2, 32, 2, 8)
+    assert bool(jnp.isfinite(h).all())
+    # recurrence matters: zeroing r changes the output
+    h2, _ = ref.slstm_ref(x, r_ifzo=jnp.zeros_like(r))
+    assert not jnp.allclose(h, h2)

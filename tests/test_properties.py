@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import PAGE, pack_pages
+from repro.core.hardware import HWSpec
+from repro.core.hmsim import build_units, simulate_sentinel, simulate_static
+from repro.core.profiler import DataObject, TraceProfile
+from repro.optim.adamw import OptConfig, compress_decompress, schedule
+from repro.sharding import AxisRules
+
+
+# ----------------------------------------------------------- strategies ----
+
+@st.composite
+def data_objects(draw, max_steps=16):
+    n = draw(st.integers(2, 40))
+    out = []
+    for uid in range(n):
+        birth = draw(st.integers(0, max_steps - 1))
+        death = draw(st.integers(birth, max_steps - 1))
+        size = draw(st.integers(1, 64 * 1024))
+        reads = draw(st.integers(0, 5))
+        accesses = sorted({birth, death} |
+                          set(draw(st.lists(st.integers(birth, death),
+                                            max_size=3))))
+        out.append(DataObject(uid, size, birth, death, reads, "activation",
+                              (size,), "int8", accesses, prim="dot_general"))
+    return out
+
+
+def make_profile(objs, steps=16):
+    p = TraceProfile(num_periods=steps // 2, num_steps=steps, objects=objs)
+    for s in range(steps):
+        from repro.core.profiler import LayerStats
+        p.layers[s] = LayerStats(s, flops=1e9, bytes_accessed=1e6)
+    return p
+
+
+HW = HWSpec("t", peak_flops=1e12, fast_bw=100e9, slow_bw=20e9, mig_bw=20e9,
+            fast_bytes=1e9)
+
+
+# ---------------------------------------------------------------- tests ----
+
+@given(data_objects())
+@settings(max_examples=30, deadline=None)
+def test_pack_pages_invariants(objs):
+    for mode in ("original", "profiled", "sentinel"):
+        pages, omap = pack_pages(objs, mode)
+        # every object mapped, no page over capacity for shared pages
+        assert set(omap) == {o.uid for o in objs}
+        for p in pages:
+            small = [o for o in p.objects if o.size < PAGE]
+            if len(p.objects) > 1:
+                assert sum(o.size for o in small) <= PAGE
+        # footprint >= raw bytes
+        assert len(pages) * PAGE >= sum(o.size for o in objs) - PAGE
+
+
+@given(data_objects())
+@settings(max_examples=30, deadline=None)
+def test_sentinel_packing_no_false_sharing(objs):
+    """Sentinel groups by (birth, death): no page mixes different lifetimes."""
+    pages, _ = pack_pages(objs, "sentinel")
+    for p in pages:
+        if len(p.objects) > 1:
+            sigs = {(o.birth, o.death) for o in p.objects}
+            assert len(sigs) == 1
+
+
+@given(data_objects(), st.integers(1, 8),
+       st.floats(0.05, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_sim_step_time_at_least_compute(objs, mi, frac):
+    prof = make_profile(objs)
+    total = sum(o.size for o in objs)
+    r = simulate_sentinel(prof, HW, frac * max(total, 1), mi)
+    assert r.step_time >= r.compute_time * 0.999
+    fast = simulate_static(prof, HW, "fast")
+    slow = simulate_static(prof, HW, "slow")
+    assert fast.step_time <= slow.step_time
+    # bounded by all-slow plus migration overheads
+    assert r.step_time <= slow.step_time * 2 + r.stall_time + 1.0
+
+
+@given(data_objects(), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_sim_infinite_fast_is_free(objs, mi):
+    prof = make_profile(objs)
+    r = simulate_sentinel(prof, HW, 1e18, mi)
+    fast = simulate_static(prof, HW, "fast")
+    assert abs(r.step_time - fast.step_time) <= \
+        fast.step_time * 0.01 + r.migrations * HW.mig_overhead + 1e-9
+
+
+@given(st.lists(st.floats(-1e3, 1e3), min_size=4, max_size=64),
+       st.lists(st.floats(-10, 10), min_size=4, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_error_feedback_conservation(g, ef):
+    """Quantize+error-feedback must conserve mass: deq + ef' == g + ef."""
+    n = min(len(g), len(ef))
+    g = jnp.asarray(g[:n], jnp.float32)
+    ef = jnp.asarray(ef[:n], jnp.float32)
+    deq, ef2 = compress_decompress(g, ef)
+    np.testing.assert_allclose(np.asarray(deq + ef2), np.asarray(g + ef),
+                               rtol=1e-5, atol=1e-4)
+
+
+@given(st.integers(0, 20_000))
+@settings(max_examples=50, deadline=None)
+def test_schedule_bounded(step):
+    cfg = OptConfig(lr=1e-3, warmup_steps=100, total_steps=10_000)
+    lr = float(schedule(cfg, step))
+    assert 0.0 <= lr <= cfg.lr * 1.0001
+
+
+@given(st.integers(1, 4), st.integers(1, 4),
+       st.lists(st.sampled_from(["batch", "mlp", "vocab", None, "embed"]),
+                min_size=1, max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_axis_rules_spec_valid(d, m, logical):
+    """spec() never repeats a mesh axis and respects divisibility."""
+    mesh = jax.sharding.AbstractMesh((d, m), ("data", "model"))
+    rules = AxisRules(mesh, {"batch": "data", "mlp": "model",
+                             "vocab": "model", "embed": None})
+    shape = tuple(np.random.default_rng(0).integers(1, 64, len(logical)))
+    spec = rules.spec(tuple(logical), shape)
+    flat = [a for e in spec if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))]
+    assert len(flat) == len(set(flat))
+    for dim, entry in zip(shape, spec):
+        if entry is not None:
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0

@@ -1,0 +1,154 @@
+"""Sentinel core: profiler observations, planner constraints, simulator
+behaviour — the paper's §3/§4 claims as assertions."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import allocator, hmsim, planner, profiler
+from repro.core.hardware import PAPER_HM, TPU_V5E
+from repro.models import model
+from repro.models.layers import split_params
+
+
+@pytest.fixture(scope="module")
+def prof():
+    cfg = dataclasses.replace(
+        get_config("smollm-360m"), num_layers=8, d_model=128, num_heads=8,
+        num_kv_heads=4, d_ff=512, head_dim=16, vocab_size=1024,
+        dtype="float32")
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    pshapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                           params)
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 64), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((4, 64), jnp.int32)}
+    return profiler.trace_profile(
+        jax.grad(lambda p, b: model.loss_fn(p, cfg, b, unroll_periods=True)),
+        pshapes, batch, num_periods=cfg.num_periods)
+
+
+def test_observation1_short_lived_dominance(prof):
+    """Paper Obs. 1: the large majority of data objects are short-lived."""
+    short = prof.short_lived(include_fused=True)
+    acts = [o for o in prof.objects if o.kind == "activation"]
+    assert len(short) / len(acts) > 0.75
+
+
+def test_observation2_hot_cold_skew(prof):
+    """Paper Obs. 2: few objects account for most accesses."""
+    acts = sorted((o for o in prof.objects if o.kind == "activation"),
+                  key=lambda o: -o.reads)
+    hot = acts[:len(acts) // 10]
+    # >2x the uniform 10% share
+    assert sum(o.reads for o in hot) > 0.2 * sum(o.reads for o in acts)
+
+
+def test_observation3_false_sharing(prof):
+    """Paper Obs. 3: original (bump) allocation mixes short- and long-lived
+    objects in the same pages."""
+    stats = allocator.false_sharing_stats(prof)
+    assert stats["false_shared_pages"] > 0
+
+
+def test_profiling_footprint_overhead_small(prof):
+    """Paper Table 5: one-object-per-page grows footprint only modestly
+    (large objects dominate)."""
+    o = allocator.profiling_overhead(prof)
+    assert o["profiled_bytes"] > o["orig_bytes"]
+    assert o["overhead_frac"] < 0.35
+    # small objects blow up relatively (Table 1: 0.45MB -> 152MB at paper
+    # scale; our traces have larger small objects, so the factor is smaller)
+    assert o["small_obj_profiled_bytes"] > 2 * o["small_obj_bytes"]
+
+
+def test_rs_stable_across_mi(prof):
+    """Paper §4.4: RS is nearly constant in MI."""
+    vals = [prof.rs_bytes(mi) for mi in (1, 2, 4, 8)]
+    assert max(vals) <= min(vals) * 1.05 + 1
+
+
+def test_timeline_layers_cover_fwd_and_bwd(prof):
+    fwd = [s for s in prof.layers if 1 <= s <= prof.num_periods]
+    bwd = [s for s in prof.layers
+           if prof.num_periods + 2 <= s <= 2 * prof.num_periods + 1]
+    assert len(fwd) == prof.num_periods
+    assert len(bwd) == prof.num_periods
+
+
+# ------------------------------------------------------------- simulator ----
+
+def test_sentinel_never_beats_fast_only(prof):
+    fast_only = hmsim.simulate_static(prof, PAPER_HM, "fast")
+    for frac in (0.2, 0.4, 0.8):
+        r = hmsim.simulate_sentinel_tt(prof, PAPER_HM,
+                                       frac * prof.peak_bytes(), 2)
+        assert r.step_time >= fast_only.step_time * 0.999
+
+
+def test_sentinel_beats_slow_only_and_ial(prof):
+    peak = prof.peak_bytes()
+    slow = hmsim.simulate_static(prof, PAPER_HM, "slow")
+    ial = hmsim.simulate_caching(prof, PAPER_HM, 0.3 * peak, "ial")
+    pl = planner.plan(prof, PAPER_HM, 0.3 * peak)
+    assert pl.sim.step_time < slow.step_time
+    assert pl.sim.step_time < ial.step_time
+
+
+def test_more_fast_memory_never_hurts(prof):
+    times = []
+    for frac in (0.2, 0.4, 0.6, 0.9):
+        pl = planner.plan(prof, PAPER_HM, frac * prof.peak_bytes())
+        times.append(pl.sim.step_time)
+    for a, b in zip(times, times[1:]):
+        assert b <= a * 1.02
+
+
+def test_paper_headline_band(prof):
+    """Sentinel with ~25% of peak as fast memory stays within ~15% of
+    fast-memory-only (paper: <=8% at 20% on their five models)."""
+    fast_only = hmsim.simulate_static(prof, PAPER_HM, "fast")
+    pl = planner.plan(prof, PAPER_HM, 0.25 * prof.peak_bytes())
+    assert pl.sim.step_time <= 1.15 * fast_only.step_time
+
+
+def test_case_accounting(prof):
+    """Fewer intervals -> fewer case events; each interval except the last
+    reports exactly one case."""
+    peak = prof.peak_bytes()
+    for mi in (1, 3, 6):
+        r = hmsim.simulate_sentinel_tt(prof, PAPER_HM, 0.3 * peak, mi)
+        n_int = -(-prof.num_steps // mi)
+        assert sum(r.cases.values()) == n_int - 1
+
+
+def test_planner_constraints(prof):
+    # space_ok set grows monotonically with fast size and is non-empty once
+    # the budget clears the smallest per-interval prefetch set
+    counts = []
+    for frac in (0.5, 0.7, 1.0):
+        cands = planner.enumerate_candidates(prof, PAPER_HM,
+                                             frac * prof.peak_bytes())
+        counts.append(sum(c.space_ok for c in cands))
+    assert counts == sorted(counts)
+    assert counts[-1] > 0
+    # Data(MI) grows with MI (more prefetch per interval)
+    datas = [c.data for c in cands]
+    assert datas[-1] >= datas[0]
+
+
+def test_planner_tpu_spec_runs(prof):
+    pl = planner.plan(prof, TPU_V5E, 0.3 * prof.peak_bytes())
+    assert pl.mi >= 1 and pl.sim is not None
+
+
+def test_page_grain_worse_than_object_grain(prof):
+    """The paper's core claim: object-granular Sentinel beats the same policy
+    at page granularity with bump allocation (false sharing)."""
+    peak = prof.peak_bytes()
+    obj = hmsim.simulate_sentinel_tt(prof, PAPER_HM, 0.3 * peak, 2)
+    page = hmsim.simulate_sentinel_tt(prof, PAPER_HM, 0.3 * peak, 2,
+                                      granularity="page",
+                                      page_mode="original")
+    assert obj.step_time <= page.step_time * 1.001

@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests for the whole system (paper pipeline:
+profile -> plan -> execute with the planned config), plus a small-mesh
+dry-run in a subprocess (the 512-device production dry-run lives in
+launch/dryrun.py; this proves the same path on 8 forced host devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import hmsim, planner, profiler
+from repro.core.hardware import PAPER_HM
+from repro.core.offload import SentinelConfig, from_plan, loss_kwargs
+from repro.models import model
+from repro.models.layers import split_params
+
+
+def test_profile_plan_execute_pipeline(rng):
+    """The full Sentinel workflow on one model: dynamic profile (1 traced
+    step), MI planning, then the planned config actually executes."""
+    cfg = get_config("smollm-360m").reduced()
+    params, _ = split_params(model.init_params(rng, cfg))
+    pshapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                           params)
+    batch_s = {"tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((2, 16), jnp.int32)}
+    prof = profiler.trace_profile(
+        jax.grad(lambda p, b: model.loss_fn(p, cfg, b, unroll_periods=True)),
+        pshapes, batch_s, num_periods=cfg.num_periods)
+    plan = planner.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+    scfg = from_plan(prof, plan)
+    assert cfg.num_periods % scfg.mi_periods == 0
+
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    loss = jax.jit(lambda p, b: model.loss_fn(p, cfg, b,
+                                              **loss_kwargs(scfg)))(params, batch)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_sentinel_vs_ial_full_comparison(rng):
+    """Paper Fig. 10 shape: fast-only <= sentinel < {IAL-or-slow} ceiling."""
+    cfg = get_config("lstm-ptb").reduced()
+    params, _ = split_params(model.init_params(rng, cfg))
+    pshapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                           params)
+    batch_s = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+    prof = profiler.trace_profile(
+        jax.grad(lambda p, b: model.loss_fn(p, cfg, b, unroll_periods=True)),
+        pshapes, batch_s, num_periods=cfg.num_periods)
+    peak = prof.peak_bytes()
+    fast = hmsim.simulate_static(prof, PAPER_HM, "fast").step_time
+    slow = hmsim.simulate_static(prof, PAPER_HM, "slow").step_time
+    sent = planner.plan(prof, PAPER_HM, 0.3 * peak).sim.step_time
+    ial = hmsim.simulate_caching(prof, PAPER_HM, 0.3 * peak, "ial").step_time
+    assert fast <= sent <= slow * 1.5
+    assert sent <= ial
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_subprocess():
+    """lower+compile a sharded train step on an 8-device forced-host mesh —
+    the production dry-run path, scaled down to run in CI."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, json
+        from repro import sharding as shd
+        from repro.configs.base import get_config, SHAPES, ShapeConfig
+        from repro.core.offload import SentinelConfig
+        from repro.launch import specs
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        rules = shd.tp_dp_rules(mesh)
+        cfg = get_config("smollm-360m").reduced()
+        shape = ShapeConfig("tiny", 64, 8, "train")
+        scfg = SentinelConfig(mode="offload", mi_periods=1)
+        with mesh, shd.axis_rules(rules):
+            fn, args, in_sh = specs.build_train_cell(cfg, shape, rules, scfg)
+            compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+            ma = compiled.memory_analysis()
+            print(json.dumps({"ok": True,
+                              "temp": ma.temp_size_in_bytes,
+                              "flops": compiled.cost_analysis()["flops"]}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["flops"] > 0
