@@ -424,3 +424,209 @@ def simulate_static(profile: TraceProfile, hw: HWSpec,
             for s in range(profile.num_steps))
     r = SimResult(f"all-{where}", t, sum(_step_times(profile, hw)))
     return r
+
+
+# ===================================================================== serve ==
+# Serving-phase trace model: prefill/decode phases over a slot-based continuous
+# batch.  The data objects are per-slot, per-layer KV *blocks* with
+# token-indexed access patterns — the inference analogue of the paper's
+# training-step objects.  Lifetimes are known exactly (a request's KV dies when
+# its slot is refilled), and the access schedule repeats every token, which is
+# precisely the structure Sentinel exploits.
+#
+# Access model per decode step: a slot reads all blocks inside its recent
+# attention window every token; older history blocks are re-read every
+# ``history_period`` tokens (sparse/strided history attention — the
+# "token skipping" structure of the Data_Placement_Optimization traces).
+# Every KV object's access list is therefore monotone in token index.
+
+
+@dataclass
+class KVObject:
+    """One per-slot, per-layer KV block (``block_tokens`` tokens of K+V)."""
+    uid: int
+    slot: int
+    req: int
+    layer: int
+    block: int                 # block index within the request's token stream
+    bytes: int
+    birth: int                 # global decode step when first written
+    death: int                 # last decode step of the owning request
+    token_start: int           # token range covered, [start, end)
+    token_end: int
+    prefill: bool              # born during prefill (vs appended during decode)
+    accesses: List[int] = field(default_factory=list)  # sorted decode steps
+
+
+@dataclass
+class ServeTrace:
+    """A fully resolved serving timeline for one continuous-batching run."""
+    num_slots: int
+    num_layers: int
+    block_tokens: int
+    recent_window: int
+    history_period: int
+    kv_token_bytes: float      # KV bytes per token per layer
+    weight_bytes: float        # weight bytes streamed per decode step
+    flops_per_token: float
+    num_steps: int = 0
+    objects: List[KVObject] = field(default_factory=list)
+    admits: Dict[int, List[KVObject]] = field(default_factory=dict)
+    births: Dict[int, List[KVObject]] = field(default_factory=dict)
+    frees: Dict[int, List[KVObject]] = field(default_factory=dict)
+    reads: Dict[int, List[KVObject]] = field(default_factory=dict)
+    active: Dict[int, int] = field(default_factory=dict)
+    prefill_tokens: Dict[int, int] = field(default_factory=dict)
+
+    def rs_bytes(self) -> float:
+        """Serving reserve pool (paper §4.3 restated per-token): the open,
+        still-filling KV blocks every active slot writes into must stay fast."""
+        return (self.num_slots * self.num_layers * self.block_tokens
+                * self.kv_token_bytes)
+
+    def write_bytes(self, t: int) -> float:
+        """New KV appended at step t (one token per layer per active slot)."""
+        return self.active.get(t, 0) * self.num_layers * self.kv_token_bytes
+
+    def peak_kv_bytes(self) -> float:
+        deltas: Dict[int, float] = collections.defaultdict(float)
+        for o in self.objects:
+            deltas[o.birth] += o.bytes
+            deltas[o.death + 1] -= o.bytes
+        peak = cur = 0.0
+        for t in sorted(deltas):
+            cur += deltas[t]
+            peak = max(peak, cur)
+        return peak
+
+
+def synthetic_requests(n: int, prompt_tokens: int = 96, decode_tokens: int = 48,
+                       jitter: int = 3) -> List[tuple]:
+    """Deterministic mixed request stream (no RNG: repeatability is the point)."""
+    out = []
+    for i in range(n):
+        p = prompt_tokens + (i * 17) % (jitter * 16 + 1)
+        d = decode_tokens + (i * 11) % (jitter * 8 + 1)
+        out.append((p, d))
+    return out
+
+
+def build_serve_trace(requests: Sequence[tuple], num_slots: int,
+                      num_layers: int, kv_token_bytes: float, *,
+                      block_tokens: int = 16, recent_window: int = 32,
+                      history_period: int = 4, flops_per_token: float = 1e9,
+                      weight_bytes: float = 0.0) -> ServeTrace:
+    """Resolve a request stream ``[(prompt_tokens, decode_tokens), ...]`` into
+    a slot-scheduled decode timeline with per-block KV objects."""
+    tr = ServeTrace(num_slots, num_layers, block_tokens, recent_window,
+                    history_period, float(kv_token_bytes), float(weight_bytes),
+                    float(flops_per_token))
+    slot_free = [0] * num_slots
+    uid = 0
+    for req, (p, d) in enumerate(requests):
+        slot = min(range(num_slots), key=lambda s: slot_free[s])
+        a = slot_free[slot]                 # admit step (slot refill)
+        end = a + d - 1                     # last decode step
+        slot_free[slot] = a + d
+        tr.prefill_tokens[a] = tr.prefill_tokens.get(a, 0) + p
+        for t in range(a, end + 1):
+            tr.active[t] = tr.active.get(t, 0) + 1
+
+        def make_obj(layer, blk, ts, te, birth, is_prefill):
+            nonlocal uid
+            o = KVObject(uid, slot, req, layer, blk,
+                         int((te - ts) * kv_token_bytes), birth, end,
+                         ts, te, is_prefill)
+            uid += 1
+            for t in range(birth, end + 1):
+                tokens_now = p + (t - a) + 1
+                recent = tokens_now - te < recent_window
+                if recent or (t - birth) % history_period == 0:
+                    o.accesses.append(t)
+                    tr.reads.setdefault(t, []).append(o)
+            tr.objects.append(o)
+            (tr.admits if is_prefill else tr.births).setdefault(
+                birth, []).append(o)
+            tr.frees.setdefault(end + 1, []).append(o)
+
+        n_pre = (p + block_tokens - 1) // block_tokens
+        for layer in range(num_layers):
+            for b in range(n_pre):
+                make_obj(layer, b, b * block_tokens,
+                         min((b + 1) * block_tokens, p), a, True)
+            n_dec = (d + block_tokens - 1) // block_tokens
+            for b in range(n_dec):
+                ts = p + b * block_tokens
+                make_obj(layer, n_pre + b, ts,
+                         min(ts + block_tokens, p + d), a + b * block_tokens,
+                         False)
+    tr.num_steps = max(slot_free)
+    return tr
+
+
+@dataclass
+class ServeSimResult:
+    policy: str
+    time: float                           # seconds for the whole timeline
+    tokens: int                           # decode tokens produced
+    compute_time: float                   # all-fast lower bound
+    migrations: int = 0
+    bytes_s2f: float = 0.0
+    bytes_f2s: float = 0.0
+    slow_bytes_accessed: float = 0.0
+    detail: dict = field(default_factory=dict)
+
+    @property
+    def decode_throughput(self) -> float:  # tokens / second
+        return self.tokens / max(self.time, 1e-30)
+
+    @property
+    def slowdown(self) -> float:
+        return self.time / max(self.compute_time, 1e-30)
+
+
+def simulate_serve(trace: ServeTrace, hw: HWSpec, fast_bytes: float,
+                   policy: str = "sentinel", **knobs) -> ServeSimResult:
+    """Replay the serving timeline under a registered placement policy.
+
+    Per decode step: frees -> admissions (slot refill) -> decode-block births
+    -> reads (split fast/slow by the policy's placement) -> roofline step time
+    -> policy migration pass with ``step_time * mig_bw`` of off-critical-path
+    bandwidth (the paper's migration threads), plus per-migration fixed
+    overhead on the critical path.
+    """
+    from repro.core.policies import get_policy
+    pol = get_policy(policy)(trace, hw, fast_bytes, **knobs)
+    total = compute_lb = 0.0
+    tokens = 0
+    for t in range(trace.num_steps):
+        pol.on_free(t, trace.frees.get(t, ()))
+        pol.on_admit(t, trace.admits.get(t, ()))
+        pol.on_birth(t, trace.births.get(t, ()))
+        bf, bs = pol.on_reads(t, trace.reads.get(t, ()))
+        writes = trace.write_bytes(t)
+        flops = trace.active.get(t, 0) * trace.flops_per_token
+        t_step = max(flops / hw.peak_flops,
+                     (bf + writes + trace.weight_bytes) / hw.fast_bw
+                     + bs / hw.slow_bw)
+        # slot-refill prefill cost (prompt compute + KV writes, fast tier)
+        p_tok = trace.prefill_tokens.get(t, 0)
+        if p_tok:
+            t_step += max(p_tok * trace.flops_per_token / hw.peak_flops,
+                          p_tok * trace.num_layers * trace.kv_token_bytes
+                          / hw.fast_bw)
+        migs = pol.migrate(t, t_step * hw.mig_bw)
+        total += t_step + migs * hw.mig_overhead
+        compute_lb += max(flops / hw.peak_flops,
+                          (bf + bs + writes + trace.weight_bytes) / hw.fast_bw)
+        if p_tok:
+            compute_lb += max(p_tok * trace.flops_per_token / hw.peak_flops,
+                              p_tok * trace.num_layers * trace.kv_token_bytes
+                              / hw.fast_bw)
+        tokens += trace.active.get(t, 0)
+    return ServeSimResult(policy, total, tokens, compute_lb,
+                          migrations=pol.migrations, bytes_s2f=pol.bytes_s2f,
+                          bytes_f2s=pol.bytes_f2s,
+                          slow_bytes_accessed=pol.slow_bytes_accessed,
+                          detail={"fast_bytes": fast_bytes,
+                                  "peak_kv": trace.peak_kv_bytes(), **knobs})

@@ -17,10 +17,11 @@ worth migrating.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.hardware import HWSpec
-from repro.core.hmsim import SimResult, simulate_sentinel_tt
+from repro.core.hmsim import (ServeSimResult, ServeTrace, SimResult,
+                              simulate_sentinel_tt, simulate_serve)
 from repro.core.profiler import TraceProfile
 
 
@@ -126,3 +127,106 @@ def mi_to_periods(profile: TraceProfile, mi: int) -> int:
     for the offload engine. Timeline steps map 1:1 to periods inside the
     forward/backward regions."""
     return max(1, min(mi, profile.num_periods))
+
+
+# ================================================================== serving ==
+# Decode-phase planning: the paper's Eq. 1/2 restated per *token* instead of
+# per migration interval.  During decode the timeline unit is one token step,
+# the reserve pool RS is the set of open (still-filling) KV blocks, and the
+# prefetchable data per step is bounded by one token's compute time times the
+# migration bandwidth:
+#
+#   space (Eq. 1 per-token):  hot_bytes = B * W * kv_tok < S - RS_serve
+#   time  (Eq. 2 per-token):  t_token   > prefetch_bytes(L) / BW_mig
+#
+# where W is the per-slot hot window (tokens kept in fast memory) and L the
+# look-ahead (token steps of prefetch lead).  Like the training planner, the
+# candidates surviving both constraints are measured on the serve simulator
+# and the sweet spot wins.
+
+
+@dataclass
+class ServeCandidate:
+    lookahead: int
+    hot_window: int          # tokens of KV kept fast per slot
+    prefetch_bytes: float    # per-step slow->fast demand at this look-ahead
+    t_token: float           # all-fast decode step time
+    space_ok: bool
+    time_ok: bool
+    sim: Optional[ServeSimResult] = None
+
+
+@dataclass
+class ServePlan:
+    """Tiering decision for the serving runtime: ``hot_window`` tokens of each
+    slot's KV stay in fast memory (HBM); everything older is the cold prefix
+    in host memory.  ``lookahead`` drives the simulator policy's prefetch."""
+    policy: str
+    hot_window: int
+    lookahead: int
+    fast_bytes: float
+    rs: float
+    candidates: List[ServeCandidate] = field(default_factory=list)
+    sim: Optional[ServeSimResult] = None
+
+    @property
+    def decode_throughput(self) -> float:
+        return self.sim.decode_throughput if self.sim else 0.0
+
+    def cold_len(self, max_seq: int) -> int:
+        """Cold-prefix length for a ``max_seq``-token cache buffer."""
+        return max(0, max_seq - self.hot_window)
+
+
+def serve_token_stats(trace: ServeTrace, hw: HWSpec) -> tuple:
+    """(t_token, read_bytes): all-fast decode-step time and mean per-step KV
+    read volume over the timeline — the serving analogue of interval_stats."""
+    steps = max(1, trace.num_steps)
+    read_bytes = sum(o.bytes * len(o.accesses) for o in trace.objects) / steps
+    act = sum(trace.active.get(t, 0) for t in range(steps)) / steps
+    flops = act * trace.flops_per_token
+    bw_bytes = read_bytes + trace.weight_bytes + act * trace.num_layers \
+        * trace.kv_token_bytes
+    return max(flops / hw.peak_flops, bw_bytes / hw.fast_bw), read_bytes
+
+
+def plan_serve(trace: ServeTrace, hw: HWSpec, fast_bytes: float,
+               lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
+               policy: str = "sentinel") -> ServePlan:
+    """Pick the hot window and prefetch look-ahead for serving-time tiering."""
+    rs = trace.rs_bytes()
+    budget = max(0.0, fast_bytes - rs)
+    kv_tok_all = trace.num_layers * trace.kv_token_bytes
+    slots = max(1, trace.num_slots)
+    # floor: the open, still-filling block per slot is fast by construction
+    # (it IS the reserve pool), so the hot window is never below one block
+    hot_window = max(trace.block_tokens,
+                     int(budget / (slots * kv_tok_all))) if kv_tok_all else 0
+    t_token, _ = serve_token_stats(trace, hw)
+    cold_bytes = max(0.0, trace.peak_kv_bytes() - budget)
+    # Eq. 1 per-token: the hot windows plus the reserve pool must fit (the
+    # floor above can violate this when fast memory is tiny)
+    space_ok = rs + slots * hot_window * kv_tok_all <= fast_bytes
+
+    cands: List[ServeCandidate] = []
+    for la in sorted(set(lookaheads)):
+        # history blocks re-read every history_period steps: within a
+        # look-ahead of L steps, L/period of the cold set must be prefetched,
+        # against L steps' worth of migration bandwidth (Eq. 2 per-token)
+        prefetch = cold_bytes * min(1.0, la / max(1, trace.history_period))
+        cands.append(ServeCandidate(la, hot_window, prefetch, t_token,
+                                    space_ok=space_ok,
+                                    time_ok=t_token * la * hw.mig_bw
+                                    >= prefetch))
+    # measure survivors on the simulator (fall back to everything when the
+    # constraints kill all candidates, mirroring the training planner)
+    pool = [c for c in cands if c.space_ok and c.time_ok] or cands
+    best: Optional[ServeCandidate] = None
+    for c in pool:
+        c.sim = simulate_serve(trace, hw, fast_bytes, policy,
+                               lookahead=c.lookahead)
+        if best is None or c.sim.decode_throughput > best.sim.decode_throughput:
+            best = c
+    return ServePlan(policy=policy, hot_window=best.hot_window,
+                     lookahead=best.lookahead, fast_bytes=fast_bytes, rs=rs,
+                     candidates=cands, sim=best.sim)

@@ -1,8 +1,18 @@
 """Cache construction for serving: per-layer-kind cache buffers, stacked over
-periods to match the scanned layer stack."""
+periods to match the scanned layer stack.
+
+Tier-aware construction (Sentinel-Serve): a cache can be split along the KV
+sequence dimension into a *cold prefix* (old tokens, host/slow memory) and a
+*hot window* (recent tokens, HBM/fast memory), per the decode-phase
+``ServePlan``.  On TPU the cold prefix lives in ``pinned_host`` and streams
+over PCIe at read time; on CPU (this repo's CI) the only memory kind is the
+host itself, so placement degrades to an explicit no-op while the splice and
+merge mechanics stay identical.
+"""
 from __future__ import annotations
 
-from typing import Any, Dict
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +58,154 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Dict[str, A
             if cfg.num_periods > 1 else a[None], one)
 
     return {"prologue": pro, "slots": [stacked(k) for k in cfg.period]}
+
+
+# ------------------------------------------------------- tiered (serve) ----
+
+HOST_MEMORY_KINDS = ("pinned_host", "unpinned_host")
+
+
+def host_memory_kind() -> Optional[str]:
+    """First host-side memory kind the default device exposes, or None.
+    TPU: 'pinned_host'.  CPU: 'unpinned_host' (which is also its default —
+    host offload is then an explicit no-op, keeping the code path uniform)."""
+    dev = jax.devices()[0]
+    try:
+        kinds = {m.kind for m in dev.addressable_memories()}
+    except Exception:
+        return None
+    for k in HOST_MEMORY_KINDS:
+        if k in kinds:
+            return k
+    return None
+
+
+def to_host(tree):
+    """Place every array leaf in host memory (async copy; XLA overlaps it with
+    whatever is executing — the migration channel).  Identity when the backend
+    exposes no host memory kind."""
+    kind = host_memory_kind()
+    if kind is None:
+        return tree
+    dev = jax.devices()[0]
+    sh = jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
+    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
+
+
+def to_device(tree):
+    """Bring host-resident leaves back to the device's default memory."""
+    dev = jax.devices()[0]
+    return jax.tree.map(lambda a: jax.device_put(a, dev), tree)
+
+
+def kv_token_bytes(cfg, dtype_bytes: int = 2) -> float:
+    """Mean KV-cache bytes per token per layer, averaged over ALL layer kinds
+    (stateful kinds hold O(1) state and contribute zero), so that
+    ``kv_token_bytes(cfg) * cfg.num_layers`` is the model's true per-token KV
+    growth.  Feeds the serve-trace model and the decode-phase planner."""
+    def one(kind):
+        if kind in (ATTN, LOCAL, SHARED_ATTN):
+            return 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+        if kind == MLA:
+            return (cfg.kv_lora_rank + cfg.qk_rope_dim) * dtype_bytes
+        return 0.0                    # stateful kinds: O(1) state, no KV growth
+    total = sum(one(k) for k in cfg.prologue) + \
+        cfg.num_periods * sum(one(k) for k in cfg.period)
+    return total / cfg.num_layers if cfg.num_layers else 0.0
+
+
+def _is_seq_leaf(leaf, max_seq: int) -> bool:
+    # KV buffers carry the sequence at axis -2: (B, S, H), (P, B, S, H),
+    # (B, S, rank).  Stateful caches (mamba/lstm conv+state) never match as
+    # long as no state dim equals max_seq — hold for every non-trivial
+    # max_seq in this repo.
+    return leaf.ndim >= 3 and leaf.shape[-2] == max_seq
+
+
+def split_seq_cache(caches, max_seq: int, cold_len: int):
+    """Split every seq-dim leaf at ``cold_len``: (cold_prefix, hot_window).
+    Non-seq leaves stay whole in the hot tree; their cold slot is None."""
+    cold = jax.tree.map(
+        lambda l: l[..., :cold_len, :] if _is_seq_leaf(l, max_seq) else None,
+        caches)
+    hot = jax.tree.map(
+        lambda l: l[..., cold_len:, :] if _is_seq_leaf(l, max_seq) else l,
+        caches)
+    return cold, hot
+
+
+def merge_seq_cache(cold, hot):
+    """Inverse of split_seq_cache.  Inside jit, the concatenate reading a
+    host-resident cold leaf is exactly the streamed cold-KV fetch."""
+    return jax.tree.map(
+        lambda c, h: h if c is None else jnp.concatenate([c, h], axis=-2),
+        cold, hot, is_leaf=lambda x: x is None)
+
+
+def splice_slot(big_tree, one_tree, slot: int, batch: int):
+    """Write a single-request cache (batch 1) into row ``slot`` of a batched
+    cache — the continuous-batching cache splice.  Works on full, cold, and
+    hot trees alike (None leaves pass through).  Dispatch is async: the copy
+    overlaps with whatever decode work is already enqueued.
+
+    Batch-axis position is decided by cache *structure*, not leaf shapes:
+    ``slots`` subtree leaves carry a leading (num_periods,) dim (batch at
+    axis 1), ``prologue`` leaves have batch at axis 0 — shape heuristics
+    would silently mis-splice when a sliced sequence length collides with
+    the slot count."""
+    def one_leaf(stacked):
+        def f(big, one):
+            if big is None:
+                return None
+            if stacked:                                  # (P, B, ...)
+                return big.at[:, slot].set(one[:, 0])
+            return big.at[slot].set(one[0])              # (B, ...)
+        return f
+
+    none_leaf = lambda x: x is None
+    if isinstance(big_tree, dict) and \
+            set(big_tree) == {"prologue", "slots"}:      # init_cache layout
+        return {"prologue": jax.tree.map(one_leaf(False),
+                                         big_tree["prologue"],
+                                         one_tree["prologue"],
+                                         is_leaf=none_leaf),
+                "slots": jax.tree.map(one_leaf(True), big_tree["slots"],
+                                      one_tree["slots"], is_leaf=none_leaf)}
+    # generic tree: fall back to the shape heuristic
+    def guess(big, one):
+        if big is None:
+            return None
+        stacked = big.ndim >= 2 and big.shape[1] == batch
+        return one_leaf(stacked)(big, one)
+    return jax.tree.map(guess, big_tree, one_tree, is_leaf=none_leaf)
+
+
+@dataclass
+class TieredCache:
+    """A cache split into a host-resident cold prefix and a fast hot window."""
+    cold: Any
+    hot: Any
+    cold_len: int
+    max_seq: int
+
+    def merged(self):
+        return merge_seq_cache(self.cold, self.hot)
+
+
+def init_tiered_cache(cfg, batch: int, max_seq: int, cold_len: int,
+                      dtype=jnp.bfloat16) -> TieredCache:
+    """Tier-aware cache construction: the cold KV prefix is placed in host
+    memory, the hot window (and all stateful caches) stay in device memory."""
+    cold_len = max(0, min(int(cold_len), max_seq))
+    full = init_cache(cfg, batch, max_seq, dtype)
+    cold, hot = split_seq_cache(full, max_seq, cold_len)
+    return TieredCache(to_host(cold), hot, cold_len, max_seq)
+
+
+def retier(caches, max_seq: int, cold_len: int) -> TieredCache:
+    """Split an existing full cache (e.g. fresh from prefill) into tiers."""
+    cold, hot = split_seq_cache(caches, max_seq, cold_len)
+    return TieredCache(to_host(cold), hot, cold_len, max_seq)
 
 
 def cache_logical_axes(cfg) -> Dict[str, Any]:

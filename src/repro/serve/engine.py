@@ -3,11 +3,19 @@
 ``serve_step`` (one token for the whole batch against a filled cache) is the
 function the decode-shape dry-run cells lower; ``generate`` drives it for the
 examples/benchmarks with greedy or temperature sampling.
+
+Sentinel-Serve: ``ContinuousBatcher`` optionally consults a decode-phase
+``ServePlan`` (core/planner.plan_serve).  With a plan, each slot's KV cache is
+tiered — the cold prefix (tokens older than the plan's hot window) lives in
+host memory, the hot window in HBM — and slot refills splice the prefilled
+cache into both tiers asynchronously.  Logits are bit-identical to the
+all-HBM path: the merged view reads the same values, only their placement
+(and therefore fetch bandwidth) differs.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -52,13 +60,20 @@ class ContinuousBatcher:
     """
 
     def __init__(self, params, cfg, batch_slots: int, max_seq: int,
-                 scfg: Optional[ServeConfig] = None):
-        from repro.models import kvcache
+                 scfg: Optional[ServeConfig] = None, plan=None):
         self.params, self.cfg = params, cfg
         self.B, self.max_seq = batch_slots, max_seq
         self.scfg = scfg or ServeConfig(max_seq=max_seq)
+        self.plan = plan
+        self.cold_len = plan.cold_len(max_seq) if plan is not None else 0
         dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-        self.caches = kvcache.init_cache(cfg, batch_slots, max_seq, dt)
+        if self.cold_len > 0:
+            self.tiered = kvcache.init_tiered_cache(cfg, batch_slots, max_seq,
+                                                    self.cold_len, dt)
+            self.caches = None
+        else:
+            self.tiered = None
+            self.caches = kvcache.init_cache(cfg, batch_slots, max_seq, dt)
         self.lengths = jnp.zeros((batch_slots,), jnp.int32)
         self.active = [False] * batch_slots
         self.budget = [0] * batch_slots         # tokens left to generate
@@ -80,11 +95,17 @@ class ContinuousBatcher:
             last, fresh = self._prefill(self.params,
                                         {"tokens": tokens[None]})
             # splice this request's prefilled cache row into the batch cache
-            self.caches = jax.tree.map(
-                lambda big, one: big.at[:, slot].set(one[:, 0])
-                if big.ndim >= 2 and big.shape[1] == self.B
-                else big.at[slot].set(one[0]),
-                self.caches, fresh)
+            # (async dispatch: overlaps with in-flight decode work)
+            if self.tiered is not None:
+                fc, fh = kvcache.split_seq_cache(fresh, self.max_seq,
+                                                 self.cold_len)
+                self.tiered.cold = kvcache.to_host(kvcache.splice_slot(
+                    self.tiered.cold, fc, slot, self.B))
+                self.tiered.hot = kvcache.splice_slot(
+                    self.tiered.hot, fh, slot, self.B)
+            else:
+                self.caches = kvcache.splice_slot(self.caches, fresh, slot,
+                                                  self.B)
             self.lengths = self.lengths.at[slot].set(S)
             self.last_tok = self.last_tok.at[slot].set(
                 jnp.argmax(last[0, :self.cfg.vocab_size]).astype(jnp.int32))
@@ -99,10 +120,23 @@ class ContinuousBatcher:
         self._admit()
         if not any(self.active):
             return False
-        logits, self.caches, _ = model.forward(
+        caches = self.tiered.merged() if self.tiered is not None \
+            else self.caches
+        logits, new_caches, _ = model.forward(
             self.params, self.cfg, {"tokens": self.last_tok[:, None]},
-            caches=self.caches, cache_index=self.lengths,
+            caches=caches, cache_index=self.lengths,
             decode=True)
+        if self.tiered is not None:
+            cold, hot = kvcache.split_seq_cache(new_caches, self.max_seq,
+                                                self.cold_len)
+            self.tiered.hot = hot
+            # this step's KV writes land at each slot's length; the cold tier
+            # only changes when a write falls inside the prefix (short slots)
+            if any(self.active[s] and int(self.lengths[s]) < self.cold_len
+                   for s in range(self.B)):
+                self.tiered.cold = kvcache.to_host(cold)
+        else:
+            self.caches = new_caches
         tok = jnp.argmax(logits[:, -1, :self.cfg.vocab_size], axis=-1) \
             .astype(jnp.int32)
         self.last_tok = tok
@@ -130,6 +164,35 @@ class ContinuousBatcher:
                     results.append(self.outputs[i])
                     self.outputs[i] = []
         return results
+
+
+def serve_trace_for(cfg, requests: Sequence[tuple], *, slots: int,
+                    params=None, block_tokens: int = 16,
+                    recent_window: int = 32, history_period: int = 4,
+                    dtype_bytes: int = 2, layer_group: int = 1):
+    """Build the serving-phase trace (hmsim.ServeTrace) for this model and
+    request stream — the profiling step of the decode-phase planner.  KV
+    bytes/token come from the cache geometry; weight bytes and flops/token
+    from the parameter count (2N MACs/token) when ``params`` is given, else
+    from the config's dense-layer dimensions.  ``layer_group`` coarsens the
+    object granularity to one KV block per *group* of layers (same total
+    bytes, fewer objects) — the simulator cost scales with object count while
+    the byte geometry is what decides placement quality."""
+    from repro.core import hmsim
+    kv_tok = kvcache.kv_token_bytes(cfg, dtype_bytes)
+    layers = max(1, -(-cfg.num_layers // max(1, layer_group)))
+    if params is not None:
+        n_params = sum(int(a.size) for a in jax.tree.leaves(params))
+    else:
+        n_params = (12 * cfg.num_layers * cfg.d_model ** 2
+                    + cfg.vocab_size * cfg.d_model)
+    return hmsim.build_serve_trace(
+        requests, num_slots=slots, num_layers=layers,
+        kv_token_bytes=kv_tok * cfg.num_layers / layers,
+        block_tokens=block_tokens,
+        recent_window=recent_window, history_period=history_period,
+        flops_per_token=2.0 * n_params,
+        weight_bytes=float(n_params) * dtype_bytes)
 
 
 def generate(params, cfg, prompts, num_tokens: int,
