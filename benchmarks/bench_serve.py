@@ -1,5 +1,5 @@
 """Sentinel-Serve: simulated decode throughput, fast-memory fraction x batch
-slots x placement policy.
+slots x placement policy — plus the paged/per-slot engine smoke.
 
 The serving analogue of the paper's Fig. 10 sweep: per-slot, per-layer KV
 blocks are the data objects; ``sentinel`` (lifetime-aware, object-granular,
@@ -7,11 +7,23 @@ look-ahead prefetch via the decode-phase planner) against the page-grain
 reactive LRU daemon and static PreferHBM placement.
 
     PYTHONPATH=src python -m benchmarks.bench_serve
+    PYTHONPATH=src python -m benchmarks.bench_serve \
+        --arch smollm-360m --fracs 0.1,0.2 --slots 4 --policies sentinel,lru_page
+    PYTHONPATH=src python -m benchmarks.bench_serve --paged --json BENCH_serve.json
 
 Exits non-zero if the Sentinel object policy loses to the best page-grain
-baseline at the paper's headline 20% fast-memory fraction — the CI smoke gate.
+baseline at the paper's headline 20% fast-memory fraction — the CI smoke
+gate.  ``--paged`` additionally runs the real ContinuousBatcher in both
+tiered layouts (global-boundary concat vs per-slot paged) on a reduced model
+and gates on the paged path (a) reproducing the all-HBM tokens and (b)
+re-hosting strictly fewer simulated migration bytes than the concat path.
+``--json`` publishes every row (and the gate verdicts) for trend tracking
+across PRs.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 from repro.configs.base import get_config
 from repro.core import hmsim, planner
@@ -32,22 +44,23 @@ def build_trace(cfg, slots: int) -> hmsim.ServeTrace:
     return serve_trace_for(cfg, reqs, slots=slots, layer_group=8)
 
 
-def run(arch: str = ARCH):
+def run(arch: str = ARCH, fracs=FRACS, slots_list=SLOTS, policies=None):
     cfg = get_config(arch)
+    pols = policies or list_policies()
     rows = [("bench_serve", "hw", "slots", "fast_frac", "policy",
              "tok_per_s", "slowdown", "migrations", "slow_gb")]
     verdicts = []
     for hw, hw_name in ((TPU_V5E, "tpu-v5e"), (PAPER_HM, "paper-hm")):
-        for slots in SLOTS:
+        for slots in slots_list:
             trace = build_trace(cfg, slots)
             peak = trace.peak_kv_bytes()
             # plan once at the headline fraction; the chosen look-ahead is a
             # property of the access schedule, not of the budget
             pl = planner.plan_serve(trace, hw, 0.2 * peak)
-            for frac in FRACS:
+            for frac in fracs:
                 fast = frac * peak
                 best = {}
-                for pol in list_policies():
+                for pol in pols:
                     knobs = ({"lookahead": pl.lookahead}
                              if pol == "sentinel" else {})
                     r = hmsim.simulate_serve(trace, hw, fast, pol, **knobs)
@@ -56,27 +69,125 @@ def run(arch: str = ARCH):
                                  round(r.decode_throughput, 1),
                                  round(r.slowdown, 4), r.migrations,
                                  round(r.slow_bytes_accessed / 1e9, 3)))
-                if abs(frac - 0.2) < 1e-9:
+                if abs(frac - 0.2) < 1e-9 and \
+                        {"sentinel", "lru_page"} <= set(best):
                     page = best["lru_page"].decode_throughput
                     verdicts.append((hw_name, slots,
                                      best["sentinel"].decode_throughput, page))
     return rows, verdicts
 
 
-def main():
-    rows, verdicts = run()
+def run_paged_smoke(arch: str = ARCH):
+    """Real-engine comparison: concat (global cold boundary) vs paged
+    (per-slot boundaries) tiering on a reduced model.  Returns rows and the
+    (tokens_match, paged_bytes, concat_bytes) verdict."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import model
+    from repro.models.layers import split_params
+    from repro.serve import engine
+
+    cfg = get_config(arch).reduced()
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    max_seq, slots = 32, 2
+    requests = [(7, 6), (9, 5), (6, 7), (8, 6)]
+    trace = serve_trace_for(get_config(arch), requests, slots=slots,
+                            layer_group=8)
+    plan = planner.plan_serve(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    # shrink the planned windows to the reduced max_seq so both layouts
+    # carry a real cold prefix (the full-size plan would keep everything hot)
+    plan = dataclasses.replace(plan, hot_window=max_seq // 2,
+                               slot_hot_windows=[4, 8], page_tokens=4)
+
+    def drive(p, paged=False):
+        b = engine.ContinuousBatcher(params, cfg, slots, max_seq, plan=p,
+                                     paged=paged)
+        key = jax.random.PRNGKey(3)
+        for plen, d in requests:
+            key, sub = jax.random.split(key)
+            b.submit(jax.random.randint(sub, (plen,), 0,
+                                        cfg.vocab_size).astype(jnp.int32), d)
+        return b.run(), b.sim_migration_bytes
+
+    base, _ = drive(None)
+    out_c, bytes_c = drive(plan)
+    out_p, bytes_p = drive(plan, paged=True)
+    match = base == out_c == out_p
+    rows = [("bench_serve_paged", "mode", "migration_mb", "tokens_match"),
+            ("bench_serve_paged", "concat", round(bytes_c / 1e6, 4), match),
+            ("bench_serve_paged", "paged", round(bytes_p / 1e6, 4), match)]
+    return rows, (match, bytes_p, bytes_c)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", default=ARCH)
+    ap.add_argument("--fracs", default=",".join(map(str, FRACS)),
+                    help="comma-separated fast-memory fractions of peak KV")
+    ap.add_argument("--slots", default=",".join(map(str, SLOTS)),
+                    help="comma-separated batch-slot counts")
+    ap.add_argument("--policies", default="",
+                    help=f"comma-separated subset of {list_policies()}")
+    ap.add_argument("--paged", action="store_true",
+                    help="also run the paged-vs-concat engine smoke + gate")
+    ap.add_argument("--json", default="",
+                    help="write rows + verdicts to this JSON file")
+    args = ap.parse_args(argv)
+
+    fracs = tuple(float(x) for x in args.fracs.split(",") if x)
+    slots_list = tuple(int(x) for x in args.slots.split(",") if x)
+    policies = [p for p in args.policies.split(",") if p] or None
+
+    rows, verdicts = run(args.arch, fracs, slots_list, policies)
     for r in rows:
         print(",".join(map(str, r)))
     ok = True
+    checks = []
+    if not verdicts:
+        # the headline gate needs frac 0.2 and both sentinel + lru_page; be
+        # loud that it did NOT run rather than exiting 0 indistinguishably
+        checks.append({"check": "sentinel_vs_page@20%", "status": "SKIPPED",
+                       "reason": "requires --fracs containing 0.2 and "
+                                 "--policies containing sentinel,lru_page"})
+        print("check,sentinel/page@20%,SKIPPED (needs frac 0.2 + both "
+              "sentinel and lru_page policies)")
     for hw_name, slots, sent, page in verdicts:
         rel = sent / max(page, 1e-30)
         status = "OK" if rel >= 1.0 else "FAIL"
         ok &= rel >= 1.0
+        checks.append({"check": "sentinel_vs_page@20%", "hw": hw_name,
+                       "slots": slots, "ratio": round(rel, 4),
+                       "status": status})
         print(f"check,{hw_name},slots={slots},sentinel/page@20%={rel:.3f},"
               f"{status}")
+
+    paged_rows = []
+    if args.paged:
+        paged_rows, (match, bytes_p, bytes_c) = run_paged_smoke(args.arch)
+        for r in paged_rows:
+            print(",".join(map(str, r)))
+        paged_ok = match and bytes_p < bytes_c
+        ok &= paged_ok
+        checks.append({"check": "paged_vs_concat_migration_bytes",
+                       "tokens_match": match,
+                       "paged_mb": round(bytes_p / 1e6, 4),
+                       "concat_mb": round(bytes_c / 1e6, 4),
+                       "status": "OK" if paged_ok else "FAIL"})
+        print(f"check,paged,match={match},"
+              f"paged_mb={bytes_p / 1e6:.4f},concat_mb={bytes_c / 1e6:.4f},"
+              f"{'OK' if paged_ok else 'FAIL'}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [list(r) for r in rows + paged_rows],
+                       "checks": checks}, f, indent=2)
+        print(f"wrote {args.json}")
+
     if not ok:
-        raise SystemExit("sentinel lost to a page-grain baseline at 20% "
-                         "fast-memory fraction")
+        raise SystemExit("serve benchmark gate failed (see checks above)")
 
 
 if __name__ == "__main__":

@@ -62,8 +62,9 @@ def demo_tiered(arch: str = "smollm-360m", slots: int = 2, max_seq: int = 48):
         print(f"[sim]  {pol:12s} {r.decode_throughput:9.1f} tok/s "
               f"(slowdown {r.slowdown:.3f}, {r.migrations} migrations)")
 
-    def run(p):
-        b = engine.ContinuousBatcher(params, cfg, slots, max_seq, plan=p)
+    def run(p, paged=False):
+        b = engine.ContinuousBatcher(params, cfg, slots, max_seq, plan=p,
+                                     paged=paged)
         key = jax.random.PRNGKey(7)
         for (plen, d) in requests:
             key, sub = jax.random.split(key)
@@ -72,18 +73,24 @@ def demo_tiered(arch: str = "smollm-360m", slots: int = 2, max_seq: int = 48):
             b.submit(toks, d)
         t0 = time.perf_counter()
         out = b.run()
-        return out, time.perf_counter() - t0
+        return out, time.perf_counter() - t0, b.sim_migration_bytes
 
     # force a real cold prefix even if the planned window covers max_seq
     import dataclasses
     tiered_plan = dataclasses.replace(
-        plan, hot_window=min(plan.hot_window, max_seq // 2))
-    base, t_base = run(None)
-    tier, t_tier = run(tiered_plan)
-    match = base == tier
-    print(f"[e2e]  all-HBM {t_base:5.2f}s | tiered (cold prefix on host) "
-          f"{t_tier:5.2f}s | outputs match: {match}")
+        plan, hot_window=min(plan.hot_window, max_seq // 2),
+        slot_hot_windows=[min(w, max_seq // 2)
+                          for w in (plan.slot_hot_windows or [])] or None,
+        page_tokens=min(plan.page_tokens or 8, 8))
+    base, t_base, _ = run(None)
+    tier, t_tier, mig_c = run(tiered_plan)
+    pag, t_pag, mig_p = run(tiered_plan, paged=True)
+    match = base == tier == pag
+    print(f"[e2e]  all-HBM {t_base:5.2f}s | concat-tiered {t_tier:5.2f}s "
+          f"({mig_c / 1e6:.2f} MB re-hosted) | paged per-slot {t_pag:5.2f}s "
+          f"({mig_p / 1e6:.2f} MB re-hosted) | outputs match: {match}")
     assert match, "tiered decode diverged from the all-HBM reference"
+    assert mig_p <= mig_c, "per-slot paging moved more bytes than concat"
 
 
 if __name__ == "__main__":

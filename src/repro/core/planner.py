@@ -13,6 +13,10 @@ Given one profiled training step, the planner:
 The same object drives the JAX offload engine: ``mi_periods`` is the layer-scan
 block size used by core/offload.py, and ``offload_uids`` the long-lived objects
 worth migrating.
+
+The serving half of this module (``plan_serve`` / ``ServePlan``) restates
+Eq. 1/2 per decode token; where each equation lands in the code is mapped in
+``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
@@ -160,7 +164,14 @@ class ServeCandidate:
 class ServePlan:
     """Tiering decision for the serving runtime: ``hot_window`` tokens of each
     slot's KV stay in fast memory (HBM); everything older is the cold prefix
-    in host memory.  ``lookahead`` drives the simulator policy's prefetch."""
+    in host memory.  ``lookahead`` drives the simulator policy's prefetch.
+
+    ``slot_hot_windows`` refines the single global window per *slot*: each
+    slot's window is sized from its own decode schedule (the byte-seconds its
+    KV objects occupy in the trace), so a slot serving short requests never
+    pins the same hot budget as one serving long ones.  ``page_tokens`` is
+    the page granularity those per-slot boundaries are quantized to — the
+    unit the paged decode kernel and the PageTable move."""
     policy: str
     hot_window: int
     lookahead: int
@@ -168,14 +179,46 @@ class ServePlan:
     rs: float
     candidates: List[ServeCandidate] = field(default_factory=list)
     sim: Optional[ServeSimResult] = None
+    slot_hot_windows: Optional[List[int]] = None
+    page_tokens: int = 0
 
     @property
     def decode_throughput(self) -> float:
         return self.sim.decode_throughput if self.sim else 0.0
 
     def cold_len(self, max_seq: int) -> int:
-        """Cold-prefix length for a ``max_seq``-token cache buffer."""
+        """Cold-prefix length for a ``max_seq``-token cache buffer (global
+        boundary — the concat path)."""
         return max(0, max_seq - self.hot_window)
+
+    def slot_window(self, slot: int) -> int:
+        """Hot-window tokens for ``slot`` (falls back to the global window)."""
+        if not self.slot_hot_windows:
+            return self.hot_window
+        return self.slot_hot_windows[slot % len(self.slot_hot_windows)]
+
+    def cold_len_slot(self, slot: int, seq_len: int,
+                      page_tokens: Optional[int] = None) -> int:
+        """Cold boundary for ``slot`` at its *current* sequence length,
+        quantized down to page granularity: tokens older than the slot's own
+        hot window, in whole pages.  Monotone in ``seq_len``, so within one
+        residency a slot's boundary only ever advances.  ``page_tokens``
+        overrides the plan's page size (the engine adjusts it to divide its
+        cache buffer)."""
+        cold = max(0, seq_len - self.slot_window(slot))
+        page = max(1, page_tokens if page_tokens else self.page_tokens)
+        return (cold // page) * page
+
+
+def slot_kv_weights(trace: ServeTrace) -> List[float]:
+    """Per-slot share of KV byte-seconds over the timeline: how much cache
+    each slot's decode schedule actually keeps alive.  The per-slot analogue
+    of the paper's per-object lifetime profile."""
+    w = [0.0] * max(1, trace.num_slots)
+    for o in trace.objects:
+        w[o.slot % len(w)] += o.bytes * (o.death - o.birth + 1)
+    total = sum(w) or 1.0
+    return [x / total for x in w]
 
 
 def serve_token_stats(trace: ServeTrace, hw: HWSpec) -> tuple:
@@ -227,6 +270,17 @@ def plan_serve(trace: ServeTrace, hw: HWSpec, fast_bytes: float,
                                lookahead=c.lookahead)
         if best is None or c.sim.decode_throughput > best.sim.decode_throughput:
             best = c
+
+    # Eq. 1 refined per slot: distribute the hot-token budget in proportion
+    # to each slot's own decode schedule (KV byte-seconds), floor one block
+    # (its open block is the reserve pool), quantized to block==page units.
+    blk = max(1, trace.block_tokens)
+    budget_tokens = budget / kv_tok_all if kv_tok_all else 0.0
+    weights = slot_kv_weights(trace)
+    slot_windows = [max(blk, (int(budget_tokens * w) // blk) * blk)
+                    for w in weights]
+
     return ServePlan(policy=policy, hot_window=best.hot_window,
                      lookahead=best.lookahead, fast_bytes=fast_bytes, rs=rs,
-                     candidates=cands, sim=best.sim)
+                     candidates=cands, sim=best.sim,
+                     slot_hot_windows=slot_windows, page_tokens=blk)

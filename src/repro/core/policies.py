@@ -26,8 +26,13 @@ page-grain reactive daemons (IAL/LRU) the paper compares against:
                next access is farthest — Belady with real lifetime knowledge,
                at object granularity.
 
-Policies register themselves in ``POLICIES``; the simulator
-(``hmsim.simulate_serve``) and the decode-phase planner dispatch by name.
+Policies register themselves in ``POLICIES`` via the ``@register_policy``
+decorator; the simulator (``hmsim.simulate_serve``), the decode-phase
+planner (``planner.plan_serve``) and ``benchmarks/bench_serve.py`` all
+dispatch by name, so a new policy is benchmarkable the moment it is
+registered.  Reference documentation — hook protocol, per-policy semantics,
+the incumbent tie-breaking rule in ``sentinel.migrate`` — lives in
+``docs/POLICIES.md``.
 """
 from __future__ import annotations
 

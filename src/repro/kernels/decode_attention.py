@@ -19,6 +19,45 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0 ** 20
 
 
+def masked_scores(q, k, base, length, *, window: int, softcap_val: float):
+    """QK^T scores for one KV block, scaled/softcapped/length-masked.
+
+    q: (..., G, D); k: (..., bk, D); base: first key position of the block.
+    Shared by the contiguous flash-decode kernel, the paged kernel
+    (kernels/paged_decode.py) and their jnp oracles — keeping the op sequence
+    identical is what makes kernel-vs-oracle comparisons bit-exact in
+    interpret mode.
+    """
+    nd = q.ndim
+    s = jax.lax.dot_general(
+        q, k, (((nd - 1,), (nd - 1,)), (tuple(range(nd - 2)),) * 2),
+        preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    kpos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, s.ndim - 1)
+    length = jnp.asarray(length)
+    length = length.reshape(length.shape + (1,) * (s.ndim - length.ndim))
+    ok = kpos < length
+    if window:
+        ok &= kpos >= (length - window)
+    return jnp.where(ok, s, NEG_INF)
+
+
+def online_softmax_update(s, v, acc, m, l):
+    """One online-softmax block update. s: (..., G, bk); v: (..., bk, D);
+    state acc: (..., G, D), m/l: (..., G). Returns (acc, m, l)."""
+    nd = s.ndim
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jax.lax.dot_general(
+        p, v, (((nd - 1,), (nd - 2,)), (tuple(range(nd - 2)),) * 2),
+        preferred_element_type=jnp.float32)
+    return acc_new, m_new, l_new
+
+
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
             window, softcap_val, bk, s_total):
     ki = pl.program_id(2)
@@ -32,28 +71,10 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
 
     q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
     k = k_ref[0, :, 0].astype(jnp.float32)           # (bk, D)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)
-    s = s * (q.shape[-1] ** -0.5)
-    if softcap_val:
-        s = softcap_val * jnp.tanh(s / softcap_val)
-
-    length = len_ref[0]
-    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    ok = kpos < length
-    if window:
-        ok &= kpos >= (length - window)
-    s = jnp.where(ok, s, NEG_INF)
-
-    m_prev = m_s[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
-    alpha = jnp.exp(m_prev - m_new)
-    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1)
-    acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_s[...] = m_new
+    s = masked_scores(q, k, ki * bk, len_ref[0], window=window,
+                      softcap_val=softcap_val)
+    acc[...], m_s[...], l_s[...] = online_softmax_update(
+        s, v_ref[0, :, 0].astype(jnp.float32), acc[...], m_s[...], l_s[...])
 
     @pl.when(ki == nk - 1)
     def _final():

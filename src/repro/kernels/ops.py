@@ -46,6 +46,20 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=0, softcap_val=0.0)
                                      softcap_val=softcap_val)
 
 
+def paged_decode_attention(q, k_hot, v_hot, k_cold, v_cold, page_table,
+                           page_tier, lengths, *, window=0, softcap_val=0.0):
+    """Flash-decode over paged, tiered KV pools (hot=device, cold=host).
+    See kernels/paged_decode.py for the pool/page-table layout."""
+    if _pallas_enabled():
+        from repro.kernels import paged_decode as pd
+        return pd.paged_decode_attention(
+            q, k_hot, v_hot, k_cold, v_cold, page_table, page_tier, lengths,
+            window=window, softcap_val=softcap_val, interpret=_interpret())
+    return _ref.paged_decode_attention_ref(
+        q, k_hot, v_hot, k_cold, v_cold, page_table, page_tier, lengths,
+        window=window, softcap_val=softcap_val)
+
+
 def ssd(x, dt, A, Bm, Cm, *, chunk=256, h0=None):
     if _pallas_enabled():
         from repro.kernels import mamba2 as m2

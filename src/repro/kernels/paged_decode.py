@@ -1,0 +1,190 @@
+"""Paged flash-decode over tiered KV pools (Pallas TPU).
+
+The serving-time replacement for the concat-based cold-KV read: instead of
+materializing `concat(cold_prefix, hot_window)` before attention, KV lives in
+fixed-size sequence *pages* split across two physical pools —
+
+  k_hot / v_hot    (n_hot,  page, KVH, D)  device memory (HBM)
+  k_cold / v_cold  (n_cold, page, KVH, D)  host memory (pinned_host on TPU)
+
+with a per-slot page table mapping logical page i of slot b to a physical
+page in one of the pools:
+
+  page_table (B, NP) int32   physical index into the pool named by the tier
+  page_tier  (B, NP) int32   0 = hot pool, 1 = cold pool
+
+Each slot's *cold boundary* is simply the prefix of its tier row that is 1 —
+per-slot, not global, which is what kills the page-grain false sharing the
+paper argues against: a short slot's pages never ride along when a long
+slot's history is demoted.
+
+The kernel runs one (batch, kv_head) grid cell as a flash-decode loop over
+that slot's logical pages.  Every page — hot or cold — is streamed into a
+double-buffered VMEM window with `pltpu.make_async_copy`: while page i is in
+the online-softmax update, the DMA for page i+1 is already in flight, so the
+host->VMEM copy of cold pages overlaps with compute exactly like Sentinel's
+migration threads overlap training compute.  With `window > 0` the loop
+starts at the first page that intersects the attention window, skipping the
+cold prefix entirely.
+
+Oracle: repro.kernels.ref.paged_decode_attention_ref — the same page loop in
+pure jnp, bit-exact against this kernel in interpret mode (same op sequence,
+see kernels/decode_attention.masked_scores).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.decode_attention import (NEG_INF, masked_scores,
+                                            online_softmax_update)
+
+
+def _kernel(table_ref, tier_ref, len_ref, q_ref, k_hot, v_hot, k_cold, v_cold,
+            o_ref, k_win, v_win, sem, *, page, G, D, window, softcap_val,
+            n_hot, n_cold):
+    h = pl.program_id(1)
+    length = len_ref[0]
+    npages = pl.cdiv(length, page)
+    lo = jnp.maximum(0, (length - window) // page) if window else 0
+
+    def start(i, slot):
+        """Kick off the async copy of logical page i into window ``slot``."""
+        phys = table_ref[0, i]
+
+        @pl.when(tier_ref[0, i] == 0)
+        def _():
+            p = jnp.clip(phys, 0, n_hot - 1)
+            pltpu.make_async_copy(k_hot.at[p, :, h], k_win.at[slot],
+                                  sem.at[slot, 0]).start()
+            pltpu.make_async_copy(v_hot.at[p, :, h], v_win.at[slot],
+                                  sem.at[slot, 1]).start()
+
+        @pl.when(tier_ref[0, i] != 0)
+        def _():
+            p = jnp.clip(phys, 0, n_cold - 1)
+            pltpu.make_async_copy(k_cold.at[p, :, h], k_win.at[slot],
+                                  sem.at[slot, 0]).start()
+            pltpu.make_async_copy(v_cold.at[p, :, h], v_win.at[slot],
+                                  sem.at[slot, 1]).start()
+
+    def wait(slot):
+        # the wait only needs dst shape/dtype for semaphore accounting, so a
+        # fixed hot-pool source stands in for whichever pool the copy used
+        pltpu.make_async_copy(k_hot.at[0, :, h], k_win.at[slot],
+                              sem.at[slot, 0]).wait()
+        pltpu.make_async_copy(v_hot.at[0, :, h], v_win.at[slot],
+                              sem.at[slot, 1]).wait()
+
+    q = q_ref[0, 0].astype(jnp.float32)                        # (G, D)
+
+    @pl.when(lo < npages)
+    def _warmup():
+        start(lo, jax.lax.rem(lo, 2))
+
+    def body(i, carry):
+        acc, m, l = carry
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < npages)
+        def _():  # next page's DMA overlaps this page's softmax update
+            start(i + 1, jax.lax.rem(i + 1, 2))
+
+        wait(slot)
+        s = masked_scores(q, k_win[slot].astype(jnp.float32), i * page,
+                          length, window=window, softcap_val=softcap_val)
+        return online_softmax_update(s, v_win[slot].astype(jnp.float32),
+                                     acc, m, l)
+
+    acc, m, l = jax.lax.fori_loop(
+        lo, npages, body,
+        (jnp.zeros((G, D), jnp.float32), jnp.full((G,), NEG_INF, jnp.float32),
+         jnp.zeros((G,), jnp.float32)))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_hot, v_hot, k_cold, v_cold, page_table,
+                           page_tier, lengths, *, window: int = 0,
+                           softcap_val: float = 0.0, interpret: bool = False):
+    """q: (B, H, D); pools (n, page, KVH, D); page_table/page_tier (B, NP);
+    lengths: (B,) valid tokens per slot (>= 1). Returns (B, H, D)."""
+    B, H, D = q.shape
+    page, KVH = k_hot.shape[1], k_hot.shape[2]
+    NP = page_table.shape[1]
+    G = H // KVH
+    n_hot, n_cold = k_hot.shape[0], k_cold.shape[0]
+
+    qg = q.reshape(B, KVH, G, D)
+    kernel = functools.partial(_kernel, page=page, G=G, D=D, window=window,
+                               softcap_val=softcap_val, n_hot=n_hot,
+                               n_cold=n_cold)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KVH),
+        in_specs=[
+            pl.BlockSpec((1, NP), lambda b, h: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, NP), lambda b, h: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b, h: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, page, D), k_hot.dtype),    # double-buffered K window
+            pltpu.VMEM((2, page, D), v_hot.dtype),    # double-buffered V window
+            pltpu.SemaphoreType.DMA((2, 2)),          # (buffer, k/v)
+        ],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), page_tier.astype(jnp.int32),
+      lengths.astype(jnp.int32), qg, k_hot, v_hot, k_cold, v_cold)
+    return out.reshape(B, H, D)
+
+
+def pack_kv_pools(k_cache, v_cache, cold_tokens, page_tokens: int):
+    """Pack dense caches (B, S, KVH, D) into the paged pool layout.
+
+    ``cold_tokens`` (B,): per-slot cold boundary in tokens; pages fully below
+    the boundary go to the cold pool.  Physical page order deliberately
+    interleaves slots (slot-major over logical pages) so tests exercise real
+    indirection rather than an identity table.  Returns
+    (k_hot, v_hot, k_cold, v_cold, page_table, page_tier).
+    """
+    B, S, KVH, D = k_cache.shape
+    assert S % page_tokens == 0, (S, page_tokens)
+    NP = S // page_tokens
+    kp = k_cache.reshape(B, NP, page_tokens, KVH, D)
+    vp = v_cache.reshape(B, NP, page_tokens, KVH, D)
+    cold_pages = [int(c) // page_tokens for c in cold_tokens]
+
+    hot_idx, cold_idx = [], []            # (b, i) per physical page, in order
+    table = [[0] * NP for _ in range(B)]
+    tier = [[0] * NP for _ in range(B)]
+    for i in range(NP):                   # slot-major interleave
+        for b in range(B):
+            if i < cold_pages[b]:
+                table[b][i], tier[b][i] = len(cold_idx), 1
+                cold_idx.append((b, i))
+            else:
+                table[b][i], tier[b][i] = len(hot_idx), 0
+                hot_idx.append((b, i))
+
+    def gather(pages, idx):
+        if not idx:
+            return jnp.zeros((1, page_tokens, KVH, D), pages.dtype)
+        bs = jnp.asarray([b for b, _ in idx])
+        ps = jnp.asarray([i for _, i in idx])
+        return pages[bs, ps]
+
+    return (gather(kp, hot_idx), gather(vp, hot_idx),
+            gather(kp, cold_idx), gather(vp, cold_idx),
+            jnp.asarray(table, jnp.int32), jnp.asarray(tier, jnp.int32))

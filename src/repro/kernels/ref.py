@@ -63,6 +63,56 @@ def decode_attention_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
     return o.reshape(B, H, D)
 
 
+def paged_decode_attention_ref(q, k_hot, v_hot, k_cold, v_cold, page_table,
+                               page_tier, lengths, *, window: int = 0,
+                               softcap_val: float = 0.0):
+    """Oracle for kernels/paged_decode.py: the same flash-decode page loop in
+    pure jnp, vectorized over (batch, kv_head).
+
+    q: (B, H, D); pools (n, page, KVH, D); page_table/page_tier (B, NP);
+    lengths (B,).  The loop visits every logical page and relies on exact
+    float semantics for tier-agnostic correctness: a fully masked page scores
+    NEG_INF everywhere, whose exp underflows to exactly 0.0 in float32, so
+    out-of-range pages (and, under ``window``, the skipped cold prefix)
+    contribute nothing bit-for-bit.  The op sequence mirrors the kernel
+    (shared masked_scores / online_softmax_update helpers), which is what
+    makes the kernel-vs-oracle tests in interpret mode exact rather than
+    approximate.
+    """
+    from repro.kernels.decode_attention import (masked_scores,
+                                                online_softmax_update)
+    B, H, D = q.shape
+    page, KVH = k_hot.shape[1], k_hot.shape[2]
+    NP = page_table.shape[1]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, D).astype(jnp.float32)
+    lengths = lengths.astype(jnp.int32)
+
+    def gather(pool_hot, pool_cold, i):
+        phys = page_table[:, i]
+        t = page_tier[:, i]
+        hot = pool_hot[jnp.clip(phys, 0, pool_hot.shape[0] - 1)]
+        cold = pool_cold[jnp.clip(phys, 0, pool_cold.shape[0] - 1)]
+        pg = jnp.where(t[:, None, None, None] == 0, hot, cold)  # (B,page,KVH,D)
+        return pg.transpose(0, 2, 1, 3).astype(jnp.float32)     # (B,KVH,page,D)
+
+    def body(i, carry):
+        acc, m, l = carry
+        k = gather(k_hot, k_cold, i)
+        v = gather(v_hot, v_cold, i)
+        s = masked_scores(qg, k, i * page, lengths, window=window,
+                          softcap_val=softcap_val)
+        return online_softmax_update(s, v, acc, m, l)
+
+    acc, m, l = jax.lax.fori_loop(
+        0, NP, body,
+        (jnp.zeros((B, KVH, G, D), jnp.float32),
+         jnp.full((B, KVH, G), NEG_INF, jnp.float32),
+         jnp.zeros((B, KVH, G), jnp.float32)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype).reshape(B, H, D)
+
+
 # ------------------------------------------------------------ mamba2 SSD ----
 
 def ssd_ref(x, dt, A, Bm, Cm, *, h0=None):

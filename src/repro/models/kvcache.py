@@ -208,6 +208,242 @@ def retier(caches, max_seq: int, cold_len: int) -> TieredCache:
     return TieredCache(to_host(cold), hot, cold_len, max_seq)
 
 
+# ------------------------------------------------------- paged (serve) ----
+#
+# Per-slot cold boundaries need a representation that splits the KV sequence
+# at a *different* point per batch row, which a single slice cannot express.
+# Two pieces:
+#
+#   PageTable        the metadata manager: logical (slot, page) -> physical
+#                    page in the hot or cold pool, with alloc/free/splice at
+#                    page granularity and the cold-prefix invariant (a slot's
+#                    cold pages are always a prefix of its logical pages).
+#                    This is the layout kernels/paged_decode.py consumes.
+#   PagedTieredCache the pytree storage consumed by the jnp model path on
+#                    CPU: full-size hot (device) and cold (host) trees with a
+#                    per-slot boundary vector; ``merged()`` is a masked
+#                    where-merge that reads cold rows below each slot's
+#                    boundary and hot rows above it — bit-identical to the
+#                    dense cache because every row was copied from the dense
+#                    values when it changed tier.
+#
+# On TPU the PageTable's pools are the real storage and the paged kernel
+# streams cold pages over PCIe; on CPU (CI) the two-buffer masked form is the
+# placement simulation, with migration bytes tracked by the serving engine.
+
+
+class PageTable:
+    """Slot-local logical->physical page mapping over two physical pools.
+
+    Pages are ``page_tokens`` tokens of KV.  Each slot owns an ordered list
+    of logical pages; page i lives either in the hot pool (tier 0) or the
+    cold pool (tier 1).  Invariant: the cold pages of a slot form a prefix of
+    its logical pages (the cold *boundary*), and within one residency a
+    slot's boundary only moves forward — pages are demoted hot->cold as the
+    hot window slides, never resurrected until the slot is refilled.
+    """
+
+    FREE = -1
+
+    def __init__(self, slots: int, pages_per_slot: int, page_tokens: int,
+                 hot_pages: Optional[int] = None,
+                 cold_pages: Optional[int] = None):
+        self.slots, self.pages_per_slot = slots, pages_per_slot
+        self.page_tokens = page_tokens
+        n = slots * pages_per_slot
+        self.hot_free = list(range((hot_pages or n) - 1, -1, -1))
+        self.cold_free = list(range((cold_pages or n) - 1, -1, -1))
+        self.table = [[self.FREE] * pages_per_slot for _ in range(slots)]
+        self.tier = [[self.FREE] * pages_per_slot for _ in range(slots)]
+        self.n_pages = [0] * slots
+
+    # ------------------------------------------------------------ queries --
+    def cold_pages(self, slot: int) -> int:
+        """Pages below the slot's cold boundary."""
+        t = self.tier[slot]
+        n = 0
+        while n < self.n_pages[slot] and t[n] == 1:
+            n += 1
+        return n
+
+    def cold_tokens(self, slot: int) -> int:
+        return self.cold_pages(slot) * self.page_tokens
+
+    def as_arrays(self):
+        """(page_table, page_tier) int32 arrays for kernels/paged_decode.py."""
+        return (jnp.asarray(self.table, jnp.int32),
+                jnp.asarray(self.tier, jnp.int32))
+
+    # ---------------------------------------------------------- mutations --
+    def alloc(self, slot: int, tier: int) -> int:
+        """Append one logical page to ``slot`` in the given tier; returns the
+        physical page id.  Raises when the slot or the pool is exhausted."""
+        i = self.n_pages[slot]
+        if i >= self.pages_per_slot:
+            raise ValueError(f"slot {slot}: pages_per_slot exhausted")
+        if tier == 1 and i != self.cold_pages(slot):
+            raise ValueError(f"slot {slot}: cold alloc would break the "
+                             "cold-prefix invariant")
+        pool = self.cold_free if tier == 1 else self.hot_free
+        if not pool:
+            raise ValueError(f"{'cold' if tier else 'hot'} pool exhausted")
+        phys = pool.pop()
+        self.table[slot][i] = phys
+        self.tier[slot][i] = tier
+        self.n_pages[slot] = i + 1
+        return phys
+
+    def free_slot(self, slot: int) -> int:
+        """Release every page of ``slot`` back to its pool (slot refill /
+        request completion).  Returns the number of pages released."""
+        n = self.n_pages[slot]
+        for i in range(n):
+            (self.cold_free if self.tier[slot][i] == 1
+             else self.hot_free).append(self.table[slot][i])
+            self.table[slot][i] = self.tier[slot][i] = self.FREE
+        self.n_pages[slot] = 0
+        return n
+
+    def demote(self, slot: int, page_idx: int) -> int:
+        """Move one page hot->cold.  Only the page at the cold boundary may
+        move (prefix invariant).  Returns the new cold physical id."""
+        if page_idx != self.cold_pages(slot):
+            raise ValueError(f"slot {slot}: demote({page_idx}) is not the "
+                             f"cold boundary {self.cold_pages(slot)}")
+        if page_idx >= self.n_pages[slot]:
+            raise ValueError(f"slot {slot}: page {page_idx} not allocated")
+        if not self.cold_free:
+            raise ValueError("cold pool exhausted")
+        self.hot_free.append(self.table[slot][page_idx])
+        phys = self.cold_free.pop()
+        self.table[slot][page_idx] = phys
+        self.tier[slot][page_idx] = 1
+        return phys
+
+    def splice_slot(self, slot: int, tokens: int, cold_tokens: int) -> int:
+        """Refill ``slot`` with a fresh request: free its pages, then allocate
+        ceil(tokens/page) pages with the first ``cold_tokens`` worth cold.
+        Returns the number of cold pages allocated."""
+        self.free_slot(slot)
+        n = -(-tokens // self.page_tokens) if tokens else 0
+        n_cold = min(n, cold_tokens // self.page_tokens)
+        for i in range(n):
+            self.alloc(slot, 1 if i < n_cold else 0)
+        return n_cold
+
+    def check(self) -> None:
+        """Assert structural invariants (used by the property tests)."""
+        for tier, pool in ((0, self.hot_free), (1, self.cold_free)):
+            used = [self.table[s][i] for s in range(self.slots)
+                    for i in range(self.n_pages[s])
+                    if self.tier[s][i] == tier]
+            assert len(used) == len(set(used)), f"tier {tier}: double alloc"
+            assert not (set(used) & set(pool)), f"tier {tier}: used page free"
+        for s in range(self.slots):
+            n, nc = self.n_pages[s], self.cold_pages(s)
+            assert all(self.tier[s][i] == 1 for i in range(nc))
+            assert all(self.tier[s][i] == 0 for i in range(nc, n))
+            assert all(self.table[s][i] == self.FREE for i in
+                       range(n, self.pages_per_slot))
+
+
+def copy_slot_rows(dst_tree, src_tree, slot: int, lo: int, hi: int,
+                   max_seq: int):
+    """dst[slot, lo:hi] = src[slot, lo:hi] on every seq-dim leaf; None and
+    non-seq leaves pass through.  Both trees are full-size batched caches in
+    the init_cache layout (batch-axis position decided by structure, as in
+    splice_slot).  This is the per-slot page demotion / re-host primitive:
+    only the named slot's rows move, nothing else is touched.  The seq-leaf
+    test runs on ``src`` (always a full ``max_seq`` cache), so ``dst`` may be
+    a cold *slice* whose seq dim is shorter — rows [lo, hi) must be valid in
+    both."""
+    def one(stacked):
+        def f(dst, src):
+            if dst is None or src is None or not _is_seq_leaf(src, max_seq):
+                return dst
+            if stacked:                                   # (P, B, S, H)
+                return dst.at[:, slot, lo:hi].set(src[:, slot, lo:hi])
+            return dst.at[slot, lo:hi].set(src[slot, lo:hi])
+        return f
+
+    none_leaf = lambda x: x is None
+    assert isinstance(dst_tree, dict) and set(dst_tree) == {"prologue",
+                                                            "slots"}
+    return {"prologue": jax.tree.map(one(False), dst_tree["prologue"],
+                                     src_tree["prologue"], is_leaf=none_leaf),
+            "slots": jax.tree.map(one(True), dst_tree["slots"],
+                                  src_tree["slots"], is_leaf=none_leaf)}
+
+
+@dataclass
+class PagedTieredCache:
+    """Cache with per-slot cold boundaries at page granularity.
+
+    ``hot`` is the full-size device tree (the working copy every decode step
+    writes into); ``cold`` holds host-resident copies of each slot's rows
+    below its boundary.  ``boundaries[b]`` is slot b's cold-token count,
+    always a multiple of ``page_tokens`` and monotone within one residency.
+    """
+    cold: Any
+    hot: Any
+    boundaries: Any               # (B,) int32 cold tokens per slot
+    page_tokens: int
+    max_seq: int
+
+    def merged(self):
+        """Masked where-merge: rows below each slot's boundary read the cold
+        (host) copy — inside jit this read IS the streamed cold-KV fetch —
+        rows above it read the hot tree.  Bit-identical to the dense cache."""
+        b = jnp.asarray(self.boundaries, jnp.int32)
+        pos = jnp.arange(self.max_seq)
+
+        def one(stacked):
+            def f(c, h):
+                if c is None or not _is_seq_leaf(h, self.max_seq):
+                    return h
+                mask = pos[None, :, None] < b[:, None, None]   # (B, S, 1)
+                if stacked:
+                    mask = mask[None]                          # (1, B, S, 1)
+                return jnp.where(mask, c, h)
+            return f
+
+        none_leaf = lambda x: x is None
+        return {"prologue": jax.tree.map(one(False), self.cold["prologue"],
+                                         self.hot["prologue"],
+                                         is_leaf=none_leaf),
+                "slots": jax.tree.map(one(True), self.cold["slots"],
+                                      self.hot["slots"], is_leaf=none_leaf)}
+
+    def set_boundary(self, slot: int, cold_tokens: int):
+        assert cold_tokens % self.page_tokens == 0
+        self.boundaries = jnp.asarray(self.boundaries).at[slot].set(
+            cold_tokens)
+
+    def demote_rows(self, slot: int, new_cold_tokens: int):
+        """Advance slot's boundary: copy rows [old, new) from hot into the
+        host-resident cold tree — only this slot's pages move."""
+        old = int(jnp.asarray(self.boundaries)[slot])
+        if new_cold_tokens <= old:
+            return 0
+        self.cold = to_host(copy_slot_rows(self.cold, self.hot, slot, old,
+                                           new_cold_tokens, self.max_seq))
+        self.set_boundary(slot, new_cold_tokens)
+        return new_cold_tokens - old
+
+
+def init_paged_cache(cfg, batch: int, max_seq: int, page_tokens: int,
+                     dtype=jnp.bfloat16) -> PagedTieredCache:
+    """Paged tier-aware construction: boundaries start at zero (everything
+    hot); the cold tree mirrors the seq-leaf structure in host memory."""
+    assert max_seq % page_tokens == 0, (max_seq, page_tokens)
+    hot = init_cache(cfg, batch, max_seq, dtype)
+    cold = jax.tree.map(
+        lambda l: l if _is_seq_leaf(l, max_seq) else None, hot)
+    return PagedTieredCache(to_host(cold), hot,
+                            jnp.zeros((batch,), jnp.int32), page_tokens,
+                            max_seq)
+
+
 def cache_logical_axes(cfg) -> Dict[str, Any]:
     """Logical sharding axes for every cache leaf (mirrors init_cache)."""
     def axes_layer(kind):

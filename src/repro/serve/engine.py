@@ -11,6 +11,23 @@ host memory, the hot window in HBM — and slot refills splice the prefilled
 cache into both tiers asynchronously.  Logits are bit-identical to the
 all-HBM path: the merged view reads the same values, only their placement
 (and therefore fetch bandwidth) differs.
+
+Two tiered layouts:
+
+  concat (``paged=False``)  one *global* cold boundary (``plan.cold_len``);
+      the cold tree is a sequence slice, reads concatenate cold+hot.  Simple,
+      but every slot pays the same boundary and a refill re-hosts the full
+      global prefix for that slot.
+  paged  (``paged=True``)   *per-slot* boundaries at page granularity
+      (``plan.cold_len_slot``), backed by kvcache.PagedTieredCache plus a
+      kvcache.PageTable that allocates/frees/demotes physical pages — the
+      layout the paged decode kernel (kernels/paged_decode.py) consumes.  A
+      refill touches only the refilled slot's pages; boundary advances demote
+      single pages of the slot that grew.
+
+``sim_migration_bytes`` counts every byte the batcher moves device<->host
+(cold re-hosting), so the two layouts' migration traffic is directly
+comparable (benchmarks/bench_serve.py --paged gates paged <= concat).
 """
 from __future__ import annotations
 
@@ -60,19 +77,34 @@ class ContinuousBatcher:
     """
 
     def __init__(self, params, cfg, batch_slots: int, max_seq: int,
-                 scfg: Optional[ServeConfig] = None, plan=None):
+                 scfg: Optional[ServeConfig] = None, plan=None,
+                 paged: bool = False):
+        if paged and plan is None:
+            raise ValueError("paged=True requires a ServePlan (plan=...)")
         self.params, self.cfg = params, cfg
         self.B, self.max_seq = batch_slots, max_seq
         self.scfg = scfg or ServeConfig(max_seq=max_seq)
         self.plan = plan
         self.cold_len = plan.cold_len(max_seq) if plan is not None else 0
         dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-        if self.cold_len > 0:
+        dt_bytes = 2 if dt == jnp.bfloat16 else 4
+        self._row_bytes = kvcache.kv_token_bytes(cfg, dt_bytes) \
+            * cfg.num_layers                       # KV bytes per token, all layers
+        self.sim_migration_bytes = 0.0             # device<->host cold traffic
+        self.paged = self.tiered = self.caches = self.ptable = None
+        if paged:
+            page = max(1, plan.page_tokens)
+            if max_seq % page:                     # buffer must tile in pages
+                page = next(p for p in range(page, 0, -1) if max_seq % p == 0)
+            self.page_tokens = page
+            self.paged = kvcache.init_paged_cache(cfg, batch_slots, max_seq,
+                                                  page, dt)
+            self.ptable = kvcache.PageTable(batch_slots, max_seq // page,
+                                            page)
+        elif self.cold_len > 0:
             self.tiered = kvcache.init_tiered_cache(cfg, batch_slots, max_seq,
                                                     self.cold_len, dt)
-            self.caches = None
         else:
-            self.tiered = None
             self.caches = kvcache.init_cache(cfg, batch_slots, max_seq, dt)
         self.lengths = jnp.zeros((batch_slots,), jnp.int32)
         self.active = [False] * batch_slots
@@ -86,6 +118,11 @@ class ContinuousBatcher:
     def submit(self, tokens, num_tokens: int):
         self.queue.append((tokens, num_tokens))
 
+    def _slot_cold_target(self, slot: int, seq_len: int) -> int:
+        """Slot's cold boundary at ``seq_len`` tokens, in whole engine pages
+        (the plan's page_tokens may have been adjusted to divide max_seq)."""
+        return self.plan.cold_len_slot(slot, seq_len, self.page_tokens)
+
     def _admit(self):
         for slot in range(self.B):
             if self.active[slot] or not self.queue:
@@ -96,13 +133,25 @@ class ContinuousBatcher:
                                         {"tokens": tokens[None]})
             # splice this request's prefilled cache row into the batch cache
             # (async dispatch: overlaps with in-flight decode work)
-            if self.tiered is not None:
+            if self.paged is not None:
+                # per-slot boundary: only THIS slot's cold pages are re-hosted
+                cold = self._slot_cold_target(slot, S)
+                self.ptable.splice_slot(slot, S, cold)
+                self.paged.hot = kvcache.splice_slot(self.paged.hot, fresh,
+                                                     slot, self.B)
+                self.paged.set_boundary(slot, 0)
+                if cold:
+                    self.paged.demote_rows(slot, cold)
+                self.sim_migration_bytes += cold * self._row_bytes
+            elif self.tiered is not None:
                 fc, fh = kvcache.split_seq_cache(fresh, self.max_seq,
                                                  self.cold_len)
                 self.tiered.cold = kvcache.to_host(kvcache.splice_slot(
                     self.tiered.cold, fc, slot, self.B))
                 self.tiered.hot = kvcache.splice_slot(
                     self.tiered.hot, fh, slot, self.B)
+                # global boundary: the full cold prefix re-hosts on refill
+                self.sim_migration_bytes += self.cold_len * self._row_bytes
             else:
                 self.caches = kvcache.splice_slot(self.caches, fresh, slot,
                                                   self.B)
@@ -120,21 +169,46 @@ class ContinuousBatcher:
         self._admit()
         if not any(self.active):
             return False
-        caches = self.tiered.merged() if self.tiered is not None \
-            else self.caches
+        if self.paged is not None:
+            caches = self.paged.merged()
+        elif self.tiered is not None:
+            caches = self.tiered.merged()
+        else:
+            caches = self.caches
         logits, new_caches, _ = model.forward(
             self.params, self.cfg, {"tokens": self.last_tok[:, None]},
             caches=caches, cache_index=self.lengths,
             decode=True)
-        if self.tiered is not None:
-            cold, hot = kvcache.split_seq_cache(new_caches, self.max_seq,
-                                                self.cold_len)
+        if self.paged is not None:
+            self.paged.hot = new_caches
+            # advance each active slot's own boundary: when the new length
+            # pushes a page out of the slot's hot window, demote just that
+            # page (hot -> cold pool in the table, rows re-hosted)
+            for s in range(self.B):
+                if not self.active[s]:
+                    continue
+                new_len = int(self.lengths[s]) + 1
+                while self.ptable.n_pages[s] * self.page_tokens < new_len:
+                    self.ptable.alloc(s, 0)        # decode grew into a new page
+                target = self._slot_cold_target(s, new_len)
+                moved = self.paged.demote_rows(s, target)
+                while self.ptable.cold_tokens(s) < target:
+                    self.ptable.demote(s, self.ptable.cold_pages(s))
+                self.sim_migration_bytes += moved * self._row_bytes
+        elif self.tiered is not None:
+            _, hot = kvcache.split_seq_cache(new_caches, self.max_seq,
+                                             self.cold_len)
             self.tiered.hot = hot
-            # this step's KV writes land at each slot's length; the cold tier
-            # only changes when a write falls inside the prefix (short slots)
-            if any(self.active[s] and int(self.lengths[s]) < self.cold_len
-                   for s in range(self.B)):
-                self.tiered.cold = kvcache.to_host(cold)
+            # this step's KV writes land at each slot's length; a write
+            # inside the prefix (short slots) re-hosts only that slot's row,
+            # not a re-split of the whole batch cache
+            for s in range(self.B):
+                if self.active[s] and int(self.lengths[s]) < self.cold_len:
+                    pos = int(self.lengths[s])
+                    self.tiered.cold = kvcache.to_host(kvcache.copy_slot_rows(
+                        self.tiered.cold, new_caches, s, pos, pos + 1,
+                        self.max_seq))
+                    self.sim_migration_bytes += self._row_bytes
         else:
             self.caches = new_caches
         tok = jnp.argmax(logits[:, -1, :self.cfg.vocab_size], axis=-1) \

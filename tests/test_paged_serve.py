@@ -1,0 +1,194 @@
+"""Per-slot cold boundaries end-to-end: PageTable alloc/free/splice
+invariants, planner slot windows, boundary monotonicity under slot refill,
+and the paged ContinuousBatcher matching the all-HBM reference while moving
+fewer simulated migration bytes than the global-boundary concat path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import planner
+from repro.core.hardware import TPU_V5E
+from repro.models import kvcache, model
+from repro.models.layers import split_params
+from repro.serve import engine
+
+
+# ------------------------------------------------------------ page table ----
+
+def test_page_table_alloc_free_splice_invariants():
+    pt = kvcache.PageTable(slots=3, pages_per_slot=4, page_tokens=8)
+    n_cold = pt.splice_slot(0, tokens=30, cold_tokens=16)
+    pt.check()
+    assert (n_cold, pt.n_pages[0], pt.cold_pages(0)) == (2, 4, 2)
+    pt.splice_slot(1, tokens=9, cold_tokens=0)
+    pt.check()
+    assert pt.cold_tokens(1) == 0 and pt.n_pages[1] == 2
+    # demotion advances the cold boundary one page at a time
+    pt.demote(1, 0)
+    pt.check()
+    assert pt.cold_tokens(1) == 8
+    # refill releases every page back to its pool
+    before_hot, before_cold = len(pt.hot_free), len(pt.cold_free)
+    released = pt.free_slot(0)
+    pt.check()
+    assert released == 4
+    assert len(pt.hot_free) == before_hot + 2
+    assert len(pt.cold_free) == before_cold + 2
+    # splice after free reuses pages without leaking
+    pt.splice_slot(0, tokens=32, cold_tokens=32)
+    pt.check()
+    assert pt.cold_pages(0) == 4
+
+
+def test_page_table_guards():
+    pt = kvcache.PageTable(slots=1, pages_per_slot=2, page_tokens=4,
+                           hot_pages=2, cold_pages=1)
+    pt.alloc(0, 0)
+    with pytest.raises(ValueError, match="cold-prefix"):
+        pt.alloc(0, 1)                    # cold after hot breaks the prefix
+    pt.alloc(0, 0)
+    with pytest.raises(ValueError, match="exhausted"):
+        pt.alloc(0, 0)                    # pages_per_slot exhausted
+    with pytest.raises(ValueError, match="not the cold boundary"):
+        pt.demote(0, 1)
+    pt.demote(0, 0)
+    with pytest.raises(ValueError, match="cold pool exhausted"):
+        pt.demote(0, 1)                   # cold pool only had one page
+
+
+def test_paged_cache_merge_is_bit_identical():
+    """Scribbling over hot rows below a slot's boundary must not leak into
+    the merged view — cold rows are the copy of record."""
+    cfg = get_config("smollm-360m").reduced()
+    B, S, page = 2, 32, 8
+    pc = kvcache.init_paged_cache(cfg, B, S, page, jnp.float32)
+    dense = jax.tree.map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(a.size % 89),
+                                    a.shape).astype(a.dtype),
+        kvcache.init_cache(cfg, B, S, jnp.float32))
+    pc.hot = dense
+    assert pc.demote_rows(0, 16) == 16
+    assert pc.demote_rows(0, 16) == 0            # idempotent at the boundary
+    pc.hot = kvcache.copy_slot_rows(
+        jax.tree.map(lambda a: a, pc.hot),
+        jax.tree.map(lambda a: None if a is None else jnp.full_like(a, -9.0),
+                     pc.hot, is_leaf=lambda x: x is None),
+        0, 0, 16, S)
+    merged = pc.merged()
+    for a, b in zip(jax.tree.leaves(dense), jax.tree.leaves(merged)):
+        if a.ndim >= 3 and a.shape[-2] == S:
+            assert jnp.array_equal(a, b)
+
+
+# --------------------------------------------------------------- planner ----
+
+def test_plan_serve_slot_windows():
+    from repro.core import hmsim
+    reqs = hmsim.synthetic_requests(12)
+    trace = hmsim.build_serve_trace(reqs, num_slots=4, num_layers=8,
+                                    kv_token_bytes=4096, weight_bytes=50e6,
+                                    flops_per_token=2e9)
+    pl = planner.plan_serve(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    assert pl.page_tokens == trace.block_tokens
+    assert pl.slot_hot_windows and len(pl.slot_hot_windows) == trace.num_slots
+    for w in pl.slot_hot_windows:
+        assert w >= trace.block_tokens               # reserve-pool floor
+        assert w % trace.block_tokens == 0           # page-quantized
+    # per-slot cold boundaries: page-aligned and monotone in sequence length
+    prev = -1
+    for seq_len in range(0, 200, 7):
+        c = pl.cold_len_slot(1, seq_len)
+        assert c % pl.page_tokens == 0
+        assert c >= prev
+        prev = c
+    # a slot serving more KV byte-seconds never gets a smaller window
+    w = planner.slot_kv_weights(trace)
+    order = sorted(range(len(w)), key=lambda s: w[s])
+    windows = [pl.slot_hot_windows[s] for s in order]
+    assert windows == sorted(windows)
+
+
+# ------------------------------------------------------------------- e2e ----
+
+@pytest.fixture(scope="module")
+def served():
+    """Run the same request stream through all three batcher layouts."""
+    cfg = get_config("smollm-360m").reduced()
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    max_seq, slots = 32, 2
+    requests = [(7, 6), (9, 5), (6, 7)]
+
+    trace = engine.serve_trace_for(get_config("smollm-360m"), requests,
+                                   slots=slots, layer_group=8)
+    plan = planner.plan_serve(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    # small per-slot windows so decode actually crosses page boundaries
+    plan = dataclasses.replace(plan, hot_window=max_seq // 2,
+                               slot_hot_windows=[4, 8], page_tokens=4)
+
+    def run(p, paged=False):
+        b = engine.ContinuousBatcher(params, cfg, slots, max_seq, plan=p,
+                                     paged=paged)
+        key = jax.random.PRNGKey(3)
+        boundary_log = []
+        for plen, d in requests:
+            key, sub = jax.random.split(key)
+            b.submit(jax.random.randint(sub, (plen,), 0,
+                                        cfg.vocab_size).astype(jnp.int32), d)
+        results = []
+        while b.queue or any(b.active):
+            if not b.step():
+                break
+            if paged:
+                boundary_log.append((
+                    [int(x) for x in b.lengths],
+                    [int(x) for x in jnp.asarray(b.paged.boundaries)]))
+            for i in range(b.B):
+                if not b.active[i] and b.outputs[i]:
+                    results.append(b.outputs[i])
+                    b.outputs[i] = []
+        return results, b, boundary_log
+
+    base, _, _ = run(None)
+    concat, b_concat, _ = run(plan)
+    paged, b_paged, log = run(plan, paged=True)
+    return base, concat, paged, b_concat, b_paged, log
+
+
+def test_paged_batcher_matches_all_hbm(served):
+    base, concat, paged, *_ = served
+    assert base == concat == paged
+    assert len(base) == 3
+
+
+def test_paged_moves_fewer_bytes_than_concat(served):
+    *_, b_concat, b_paged, _ = served
+    assert b_paged.sim_migration_bytes > 0       # boundaries actually moved
+    assert b_paged.sim_migration_bytes < b_concat.sim_migration_bytes
+
+
+def test_per_slot_boundary_monotone_under_refill(served):
+    """Within one residency a slot's cold boundary only advances (and stays
+    page-aligned, at or below the slot's length); it resets only when the
+    slot is refilled with a new request."""
+    *_, b_paged, log = served
+    page = b_paged.page_tokens
+    assert any(any(bd > 0 for bd in bounds) for _, bounds in log)
+    for (len_prev, bd_prev), (len_now, bd_now) in zip(log, log[1:]):
+        for s in range(len(bd_now)):
+            assert bd_now[s] % page == 0
+            assert bd_now[s] <= len_now[s]
+            if len_now[s] == len_prev[s] + 1:    # same residency, one decode
+                assert bd_now[s] >= bd_prev[s]
+    b_paged.ptable.check()
+
+
+def test_paged_table_consistent_with_boundaries(served):
+    """The PageTable's per-slot cold pages agree with the storage-side
+    boundary vector at the end of the run."""
+    *_, b_paged, _ = served
+    bounds = [int(x) for x in jnp.asarray(b_paged.paged.boundaries)]
+    for s in range(b_paged.B):
+        assert b_paged.ptable.cold_tokens(s) == bounds[s]
