@@ -4,7 +4,7 @@ MI-determination + test-and-trial."""
 from __future__ import annotations
 
 from benchmarks.common import BENCH_ARCHS, bench_profile
-from repro.core import hmsim, planner
+from repro import runtime
 from repro.core.hardware import PAPER_HM, TPU_V5E
 
 
@@ -14,7 +14,7 @@ def run_table3(fast_frac: float = 0.3):
              "tt_used")]
     for arch in BENCH_ARCHS:
         cfg, prof = bench_profile(arch)
-        plan = planner.plan(prof, PAPER_HM, fast_frac * prof.peak_bytes())
+        plan = runtime.plan(prof, PAPER_HM, fast_frac * prof.peak_bytes())
         rows.append(("bench_table3", arch, 1, plan.steps_used,
                      plan.sim.detail.get("tt_choice", "n/a")))
     return rows
@@ -27,10 +27,10 @@ def run(arch: str = "smollm-360m", fast_frac: float = 0.3):
     peak = prof.peak_bytes()
     for hw, name in ((PAPER_HM, "paper-hm"), (TPU_V5E, "tpu-v5e")):
         fast = fast_frac * peak
-        base = hmsim.simulate_static(prof, hw, "fast").step_time
-        plan = planner.plan(prof, hw, fast)
+        base = runtime.simulate(prof, hw, fast, "all_fast").step_time
+        plan = runtime.plan(prof, hw, fast)
         for mi in sorted({1, 2, 3, 4, 6, 8, 12, 16, plan.mi}):
-            r = hmsim.simulate_sentinel_tt(prof, hw, fast, mi)
+            r = runtime.simulate(prof, hw, fast, "sentinel_mi", mi=mi)
             rows.append(("bench_planner", name, mi,
                          round(base / r.step_time, 4),
                          r.cases[1], r.cases[2], r.cases[3], r.migrations,

@@ -1,0 +1,118 @@
+"""Unified-runtime smoke: one entry point, both workloads.
+
+Runs a training-sim sweep and a serving sweep through the *same* surface —
+``runtime.plan`` + the unified policy registry — on deterministic synthetic
+workloads (no model tracing, no RNG), and publishes ``BENCH_runtime.json``
+beside ``BENCH_serve.json`` for trend tracking across PRs.
+
+    PYTHONPATH=src python -m benchmarks.bench_runtime --json BENCH_runtime.json
+
+Gates (exit non-zero on failure):
+  - on BOTH workloads at the paper's headline 20% fast-memory fraction, the
+    lifetime-aware object policy must not lose to the page-grain reactive
+    baseline (``sentinel_mi`` vs ``ial`` on training, ``sentinel`` vs
+    ``lru_page`` on serving);
+  - both plans must round-trip through ``PlacementPlan.to_json`` /
+    ``from_json`` byte-identically (planner-drift canary).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro import runtime
+from repro.core.hardware import PAPER_HM, TPU_V5E
+from repro.runtime.synthetic import synthetic_profile, synthetic_serve_trace
+
+FRACS = (0.1, 0.2, 0.4, 0.8)
+
+
+def sweep(workload, hw, hw_name: str, kind: str, peak: float, policies,
+          fracs=FRACS):
+    """One (workload, hw) sweep: plan once, then simulate every policy at
+    every fast-memory fraction."""
+    pl = runtime.plan(workload, hw, 0.2 * peak)
+    rows, results = [], {}
+    for frac in fracs:
+        fast = frac * peak
+        for pol in policies:
+            knobs = {}
+            if pol == "sentinel" and kind == "serving":
+                knobs["lookahead"] = pl.lookahead
+            if pol == "sentinel_mi" and kind == "training":
+                knobs["mi"] = pl.mi
+            r = runtime.simulate(workload, hw, fast, pol, **knobs)
+            results[(frac, pol)] = r
+            rows.append(("bench_runtime", kind, hw_name, frac, pol,
+                         round(r.slowdown, 4),
+                         round(r.decode_throughput, 1), r.migrations,
+                         round(r.slow_bytes_accessed / 1e9, 4)))
+    return pl, rows, results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--json", default="",
+                    help="write rows + checks to this JSON file")
+    args = ap.parse_args(argv)
+
+    prof = synthetic_profile()
+    trace = synthetic_serve_trace()
+    header = ("bench_runtime", "workload", "hw", "fast_frac", "policy",
+              "slowdown", "tok_per_s", "migrations", "slow_gb")
+    rows, checks = [header], []
+    ok = True
+
+    def gate(name: str, winner, loser, lo, hi):
+        nonlocal ok
+        ratio = lo / max(hi, 1e-30)
+        status = "OK" if ratio <= 1.0 else "FAIL"
+        ok &= ratio <= 1.0
+        checks.append({"check": name, "winner": winner, "loser": loser,
+                       "slowdown_ratio": round(ratio, 4), "status": status})
+        print(f"check,{name},{winner}<= {loser},ratio={ratio:.4f},{status}")
+
+    # ---- training workload: the MI planner through the unified surface ----
+    pl_t, rows_t, res_t = sweep(
+        prof, PAPER_HM, "paper-hm", "training",
+        prof.peak_bytes(), ("all_slow", "ial", "lru", "sentinel",
+                            "sentinel_mi"))
+    rows += rows_t
+    gate("training_sentinel_vs_page@20%", "sentinel_mi", "ial",
+         res_t[(0.2, "sentinel_mi")].time, res_t[(0.2, "ial")].time)
+
+    # ---- serving workload: the decode planner through the same surface ----
+    pl_s, rows_s, res_s = sweep(
+        trace, TPU_V5E, "tpu-v5e", "serving",
+        trace.peak_kv_bytes(), ("all_slow", "lru_page", "prefer_fast",
+                                "sentinel"))
+    rows += rows_s
+    gate("serving_sentinel_vs_page@20%", "sentinel", "lru_page",
+         res_s[(0.2, "sentinel")].time, res_s[(0.2, "lru_page")].time)
+
+    # ---- plan serialization canary: byte-identical JSON round trip ----
+    for kind, pl in (("training", pl_t), ("serving", pl_s)):
+        s = pl.to_json()
+        stable = runtime.PlacementPlan.from_json(s).to_json() == s
+        ok &= stable
+        checks.append({"check": f"{kind}_plan_json_roundtrip",
+                       "bytes": len(s),
+                       "status": "OK" if stable else "FAIL"})
+        print(f"check,{kind}_plan_json_roundtrip,bytes={len(s)},"
+              f"{'OK' if stable else 'FAIL'}")
+
+    for r in rows:
+        print(",".join(map(str, r)))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [list(r) for r in rows],
+                       "plans": {"training": pl_t.to_dict(),
+                                 "serving": pl_s.to_dict()},
+                       "checks": checks}, f, indent=2)
+        print(f"wrote {args.json}")
+    if not ok:
+        raise SystemExit("runtime benchmark gate failed (see checks above)")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,15 +4,17 @@
 
 1. Build a model from the arch registry.
 2. Profile one training step at the data-object level (the paper's §3).
-3. Plan the migration interval (§4.4: Eq. 1/2 pruning + simulated sweep).
+3. Plan the migration interval via the unified runtime API
+   (§4.4: Eq. 1/2 pruning + simulated sweep through the policy registry).
 4. Train with the planned offload configuration.
 5. Compare Sentinel vs the IAL baseline vs fast-memory-only on the simulator.
 """
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.configs.base import get_config
-from repro.core import hmsim, planner, profiler
+from repro.core import profiler
 from repro.core.hardware import PAPER_HM
 from repro.core.offload import from_plan
 from repro.data.pipeline import DataConfig
@@ -43,7 +45,7 @@ print(f"[2] profiled {len(prof.objects)} data objects; "
 
 # 3. plan the migration interval --------------------------------------------
 fast = 0.25 * prof.peak_bytes()
-plan = planner.plan(prof, PAPER_HM, fast)
+plan = runtime.plan(prof, PAPER_HM, fast)
 print(f"[3] planned MI={plan.mi} ({plan.steps_used} steps used for p,m&t; "
       f"paper Table 3 uses 2-8); cases={plan.sim.cases}")
 
@@ -60,8 +62,8 @@ print(f"[4] trained 20 steps with MI={scfg.mi_periods} offload blocks; "
       f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
 
 # 5. the paper's comparison ---------------------------------------------------
-fast_only = hmsim.simulate_static(prof, PAPER_HM, "fast")
-ial = hmsim.simulate_caching(prof, PAPER_HM, fast, "ial")
+fast_only = runtime.simulate(prof, PAPER_HM, fast, "all_fast")
+ial = runtime.simulate(prof, PAPER_HM, fast, "ial")
 print(f"[5] step-time vs fast-only: sentinel "
       f"{plan.sim.step_time / fast_only.step_time:.3f}x, "
       f"IAL {ial.step_time / fast_only.step_time:.3f}x "

@@ -11,10 +11,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.configs.base import get_config
-from repro.core import hmsim, planner
 from repro.core.hardware import TPU_V5E
-from repro.core.policies import list_policies
 from repro.models import model
 from repro.models.layers import split_params
 from repro.serve import engine
@@ -53,12 +52,12 @@ def demo_tiered(arch: str = "smollm-360m", slots: int = 2, max_seq: int = 48):
     trace = engine.serve_trace_for(get_config(arch), requests, slots=slots,
                                    layer_group=8)
     fast = 0.2 * trace.peak_kv_bytes()
-    plan = planner.plan_serve(trace, TPU_V5E, fast)
+    plan = runtime.plan(trace, TPU_V5E, fast)
     print(f"[plan] hot_window={plan.hot_window} tokens, "
           f"lookahead={plan.lookahead}, cold_len({max_seq})="
           f"{plan.cold_len(max_seq)}")
-    for pol in list_policies():
-        r = hmsim.simulate_serve(trace, TPU_V5E, fast, pol)
+    for pol in ("prefer_fast", "lru_page", "sentinel", "sentinel_mi"):
+        r = runtime.simulate(trace, TPU_V5E, fast, pol)
         print(f"[sim]  {pol:12s} {r.decode_throughput:9.1f} tok/s "
               f"(slowdown {r.slowdown:.3f}, {r.migrations} migrations)")
 

@@ -1,3 +1,14 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# Workload tracers (profiler for training, hmsim's trace model for serving),
+# hardware specs, and deprecation shims for the pre-unification surfaces.
+# The system itself — tier/object model, policy registry, planner — lives in
+# repro.runtime (see docs/RUNTIME_API.md).
+import warnings
+
+
+def warn_deprecated(old: str, new: str, stacklevel: int = 3) -> None:
+    """Shared DeprecationWarning for the legacy core.* entry points.
+    Default stacklevel 3: helper -> shim -> caller; add one per extra
+    indirection frame."""
+    warnings.warn(f"{old} is deprecated; use {new} "
+                  "(see docs/RUNTIME_API.md)", DeprecationWarning,
+                  stacklevel=stacklevel)

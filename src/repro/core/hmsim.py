@@ -1,89 +1,46 @@
-"""Heterogeneous-memory simulator: replays a profiled trace under a placement
-policy and a hardware spec, producing step time, migration counts and the
-paper's Case 1/2/3 accounting.
+"""Heterogeneous-memory trace model + legacy simulator entry points.
 
-This is the evaluation engine for the paper's figures (7, 8, 10, 11, 12 and
-Tables 4/5): on CPU-only hardware we cannot run a real two-tier memory, so —
-exactly like the paper's own analysis — performance comes from a bandwidth/
-compute cost model:
+This module owns the **serving-phase trace model** (``ServeTrace`` /
+``KVObject`` / ``build_serve_trace``): prefill/decode phases over a slot-based
+continuous batch, where the data objects are per-slot, per-layer KV *blocks*
+with token-indexed access patterns — the inference analogue of the paper's
+training-step objects.  Lifetimes are known exactly (a request's KV dies when
+its slot is refilled), and the access schedule repeats every token, which is
+precisely the structure Sentinel exploits.
 
-    t(step) = max(flops/peak,  bytes_fast/fast_bw + bytes_slow/slow_bw)
-              + stalls (demand fetches, Case-3 waits)
+The simulators that used to live here (``simulate_sentinel`` /
+``simulate_caching`` / ``simulate_static`` / ``simulate_serve``) are now
+**deprecation shims**: the implementations moved into the unified policy
+registry (``repro.runtime.policies``), where each one is a registered policy
+runnable on *any* workload::
 
-Migration bandwidth is a separate full-duplex channel (the paper's two
-migration threads), drained concurrently with compute.
+    from repro import runtime
+    runtime.simulate(profile_or_trace, hw, fast_bytes, "sentinel_mi", mi=2)
 
-Units are data *objects* for Sentinel (object-granular, the paper's point) and
-*pages* for the page-grain baselines (IAL from Yan et al. ASPLOS'19, LRU).
+The shims emit ``DeprecationWarning`` and return results equal to the new
+API's (``SimResult`` and ``ServeSimResult`` now alias
+``runtime.PlacementResult``).  See docs/RUNTIME_API.md for the migration
+guide.
 """
 from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
-from repro.core.allocator import pack_pages
+from repro.core import warn_deprecated
 from repro.core.hardware import HWSpec
 from repro.core.profiler import TraceProfile
+# legacy re-exports: the unit model and result type live in the runtime now
+from repro.runtime.policies import (PlacementResult, Unit,  # noqa: F401
+                                    build_units)
+
+SimResult = PlacementResult
+ServeSimResult = PlacementResult
 
 
-@dataclass
-class Unit:
-    uid: int
-    bytes: int
-    accesses: Sequence[int]     # sorted step indices
-    long_lived: bool
-    short_lived_resident: bool  # lives in the reserved pool (Sentinel)
-
-
-@dataclass
-class SimResult:
-    policy: str
-    step_time: float                      # seconds for one training step
-    compute_time: float                   # lower bound (all-fast)
-    migrations: int = 0                   # unit migrations (both directions)
-    bytes_s2f: float = 0.0
-    bytes_f2s: float = 0.0
-    stall_time: float = 0.0
-    slow_bytes_accessed: float = 0.0
-    cases: Dict[int, int] = field(default_factory=lambda: {1: 0, 2: 0, 3: 0})
-    mi: int = 0
-    detail: dict = field(default_factory=dict)
-
-    @property
-    def slowdown(self) -> float:
-        return self.step_time / max(self.compute_time, 1e-30)
-
-    @property
-    def throughput(self) -> float:
-        return 1.0 / max(self.step_time, 1e-30)
-
-
-def build_units(profile: TraceProfile, granularity: str = "object",
-                page_mode: str = "sentinel") -> List[Unit]:
-    """granularity 'object': Sentinel's view. 'page': pack objects into pages
-    (page_mode 'original' reproduces false sharing)."""
-    acts = [o for o in profile.objects
-            if o.kind == "activation" and o.accesses and not o.fused]
-    weights = [o for o in profile.objects if o.kind == "weight" and o.accesses]
-    units: List[Unit] = []
-    if granularity == "object":
-        for o in acts:
-            units.append(Unit(o.uid, o.size, sorted(set(o.accesses)),
-                              o.lifetime >= 2, o.lifetime <= 1))
-        for o in weights:
-            units.append(Unit(o.uid, o.size, sorted(set(o.accesses)), True, False))
-    else:
-        pages, _ = pack_pages(acts + weights, page_mode)
-        for p in pages:
-            accesses = p.accesses
-            if not accesses:
-                continue
-            long_lived = p.death - p.birth >= 2 or \
-                any(o.kind == "weight" for o in p.objects)
-            units.append(Unit(100_000_000 + p.pid, p.bytes, accesses,
-                              long_lived, not long_lived))
-    return units
+def _deprecated(old: str, new: str):
+    warn_deprecated(f"core.hmsim.{old}", new, stacklevel=4)
 
 
 def _step_times(profile: TraceProfile, hw: HWSpec) -> List[float]:
@@ -93,346 +50,62 @@ def _step_times(profile: TraceProfile, hw: HWSpec) -> List[float]:
             for s in range(profile.num_steps)]
 
 
-# --------------------------------------------------------------- Sentinel ----
+# ----------------------------------------------------------- legacy shims ----
 
 def simulate_sentinel(profile: TraceProfile, hw: HWSpec, fast_bytes: float,
                       mi: int, *, stall_on_case3: bool = True,
                       reserve_pool: bool = True,
                       granularity: str = "object",
                       page_mode: str = "sentinel") -> SimResult:
-    """Sentinel (§4.4): MI-step intervals. At the start of interval A the data
-    needed by interval B is prefetched slow->fast overlapped with A's compute;
-    long-lived units not needed soon are evicted fast->slow mid-interval
-    (this is what frees space for the residual-offload pattern: activations
-    produced in forward interval i leave fast memory until their backward
-    interval). Newly produced long-lived units are always born in fast.
-    """
-    units = build_units(profile, granularity, page_mode)
-    steps = profile.num_steps
-    t_step = _step_times(profile, hw)
-    res = SimResult("sentinel", 0.0, sum(t_step), mi=mi)
-
-    access_map: Dict[int, List[Unit]] = collections.defaultdict(list)
-    for u in units:
-        for s in u.accesses:
-            access_map[s].append(u)
-
-    rs = profile.rs_bytes(mi) if reserve_pool else 0.0
-    budget = max(0.0, fast_bytes - rs)
-
-    movable = [u for u in units if u.long_lived]
-    in_fast: Dict[int, bool] = {u.uid: False for u in movable}
-    fast_used = 0.0
-
-    def next_access_after(u: Unit, s: int) -> Optional[int]:
-        for a in u.accesses:
-            if a > s:
-                return a
-        return None
-
-    slow_resident = {u.uid for u in movable if u.bytes > budget}
-    # (paper §4.5: fast memory must at least fit RS + the largest long-lived
-    # object; units violating that are pinned slow and accessed there)
-
-    def force_evict(need: float, now: int, horizon: int) -> float:
-        """Make room for `need` bytes by evicting farthest-next-access units.
-        Returns bytes evicted (caller charges the eviction channel)."""
-        nonlocal fast_used
-        victims = [u for u in movable if in_fast.get(u.uid, False)]
-        victims.sort(key=lambda u: -(next_access_after(u, now) or 10 ** 9))
-        freed = 0.0
-        for u in victims:
-            if fast_used + need <= budget:
-                break
-            in_fast[u.uid] = False
-            fast_used -= u.bytes
-            freed += u.bytes
-            res.migrations += 1
-            res.bytes_f2s += u.bytes
-        return freed
-
-    # initial prefetch: units needed by interval 0, by first-use order
-    first = [u for u in movable if any(a < mi for a in u.accesses)
-             and u.uid not in slow_resident]
-    first.sort(key=lambda u: u.accesses[0])
-    for u in first:
-        if fast_used + u.bytes <= budget:
-            in_fast[u.uid] = True
-            fast_used += u.bytes
-            res.migrations += 1
-            res.bytes_s2f += u.bytes
-
-    intervals = [(i, min(i + mi, steps)) for i in range(0, steps, mi)]
-    total = 0.0
-
-    for (lo, hi) in intervals:
-        nxt_lo, nxt_hi = hi, min(hi + mi, steps)
-        migs_before = res.migrations
-
-        # ---- execute interval: compute + penalties + births + evictions ----
-        interval_compute = 0.0
-        forced_evict_bytes = 0.0
-        for s in range(lo, hi):
-            bytes_slow = 0.0
-            for u in access_map.get(s, ()):
-                if not u.long_lived:
-                    continue
-                if u.uid in slow_resident:
-                    bytes_slow += u.bytes
-                    res.slow_bytes_accessed += u.bytes
-                    continue
-                if u.accesses[0] == s and not in_fast.get(u.uid, False):
-                    # birth: produced into fast, forcing eviction if full
-                    if fast_used + u.bytes > budget:
-                        forced_evict_bytes += force_evict(u.bytes, s, nxt_hi)
-                    if fast_used + u.bytes <= budget:
-                        in_fast[u.uid] = True
-                        fast_used += u.bytes
-                    else:                        # truly no room: spills slow
-                        slow_resident.add(u.uid)
-                        bytes_slow += u.bytes
-                        res.slow_bytes_accessed += u.bytes
-                elif not in_fast.get(u.uid, False):
-                    bytes_slow += u.bytes        # read from slow
-                    res.slow_bytes_accessed += u.bytes
-            if not reserve_pool:
-                # Fig. 11 "no space reservation": short-lived units demand
-                # fast space; the shortfall is slow-accessed
-                short_here = sum(u.bytes for u in access_map.get(s, ())
-                                 if u.short_lived_resident)
-                free = fast_bytes - fast_used
-                overflow = max(0.0, short_here - max(0.0, free))
-                bytes_slow += overflow
-                res.slow_bytes_accessed += overflow
-            t_fast = max(0.0, profile.step_bytes(s) - bytes_slow)
-            t = max(profile.step_flops(s) / hw.peak_flops,
-                    t_fast / hw.fast_bw + bytes_slow / hw.slow_bw)
-            interval_compute += t
-
-        # ---- eviction channel accounting (fast->slow, full duplex) ----
-        evict_capacity = interval_compute * hw.mig_bw - forced_evict_bytes
-        if evict_capacity < 0:                    # write-back pressure stalls
-            stall = -evict_capacity / hw.mig_bw
-            res.stall_time += stall
-            total += stall
-            evict_capacity = 0.0
-        # scheduled mid-interval eviction: units not needed before nxt_hi
-        candidates = [u for u in movable if in_fast.get(u.uid, False)]
-        candidates.sort(key=lambda u: -(next_access_after(u, hi - 1) or 10 ** 9))
-        for u in candidates:
-            na = next_access_after(u, hi - 1)
-            if na is not None and na < nxt_hi:
-                continue                          # needed soon: keep
-            if u.bytes > evict_capacity:
-                break
-            evict_capacity -= u.bytes
-            in_fast[u.uid] = False
-            fast_used -= u.bytes
-            res.migrations += 1
-            res.bytes_f2s += u.bytes
-
-        # ---- prefetch for the next interval (slow->fast channel) ----
-        pending = [u for u in movable
-                   if not in_fast[u.uid] and u.uid not in slow_resident
-                   and any(nxt_lo <= a < nxt_hi for a in u.accesses)]
-        pending.sort(key=lambda u: next_access_after(u, nxt_lo - 1) or nxt_lo)
-        capacity = interval_compute * hw.mig_bw
-        space_blocked = False
-        while pending:
-            u = pending[0]
-            if fast_used + u.bytes > budget:
-                space_blocked = True
-                break
-            if u.bytes > capacity:
-                break
-            capacity -= u.bytes
-            fast_used += u.bytes
-            in_fast[u.uid] = True
-            res.migrations += 1
-            res.bytes_s2f += u.bytes
-            pending.pop(0)
-
-        # per-migration fixed overhead (move_pages/TLB shootdown on CPU HM,
-        # DMA dispatch on TPU) — exposed on the critical path
-        interval_migs = res.migrations - migs_before
-        total += interval_migs * hw.mig_overhead
-
-        total += interval_compute
-        if nxt_lo >= steps:
-            pass                                  # no next interval: no case
-        elif not pending:
-            res.cases[1] += 1
-        elif space_blocked:
-            res.cases[2] += 1                     # leave in slow
-        else:
-            res.cases[3] += 1
-            if stall_on_case3:
-                stall = 0.0
-                for u in list(pending):
-                    if fast_used + u.bytes <= budget:
-                        stall += u.bytes / hw.mig_bw
-                        fast_used += u.bytes
-                        in_fast[u.uid] = True
-                        res.migrations += 1
-                        res.bytes_s2f += u.bytes
-                        pending.remove(u)
-                res.stall_time += stall
-                total += stall
-            # else: leave in slow, pay access penalty next interval
-
-    res.step_time = total
-    res.detail = {"fast_budget": budget, "rs": rs}
-    return res
+    """DEPRECATED: ``runtime.simulate(profile, hw, fast_bytes, 'sentinel_mi',
+    mi=..., test_and_trial=False)``."""
+    _deprecated("simulate_sentinel",
+                "runtime.simulate(..., 'sentinel_mi', mi=...)")
+    from repro import runtime
+    return runtime.simulate(profile, hw, fast_bytes, "sentinel_mi", mi=mi,
+                            test_and_trial=False,
+                            stall_on_case3=stall_on_case3,
+                            reserve_pool=reserve_pool,
+                            granularity=granularity, page_mode=page_mode)
 
 
 def simulate_sentinel_tt(profile: TraceProfile, hw: HWSpec, fast_bytes: float,
                          mi: int, **kw) -> SimResult:
-    """Test-and-trial (§4.4): try both Case-3 resolutions, keep the winner."""
-    a = simulate_sentinel(profile, hw, fast_bytes, mi, stall_on_case3=True, **kw)
-    if a.cases[3] == 0:
-        a.detail["tt_choice"] = "n/a"
-        return a
-    b = simulate_sentinel(profile, hw, fast_bytes, mi, stall_on_case3=False, **kw)
-    best = a if a.step_time <= b.step_time else b
-    best.detail["tt_choice"] = "stall" if best is a else "slow-access"
-    best.detail["tt_steps_used"] = 2
-    return best
+    """DEPRECATED: test-and-trial (§4.4) is the ``sentinel_mi`` policy's
+    default; use ``runtime.simulate(..., 'sentinel_mi', mi=...)``."""
+    _deprecated("simulate_sentinel_tt",
+                "runtime.simulate(..., 'sentinel_mi', mi=...)")
+    from repro import runtime
+    return runtime.simulate(profile, hw, fast_bytes, "sentinel_mi", mi=mi,
+                            test_and_trial=True, **kw)
 
-
-# ---------------------------------------------------- page-grain baselines ----
 
 def simulate_caching(profile: TraceProfile, hw: HWSpec, fast_bytes: float,
                      policy: str = "ial", *, page_mode: str = "original",
                      repeats: int = 3, opts_per_step: int = 4) -> SimResult:
-    """Page-grain reactive baselines.
+    """DEPRECATED: the page-grain daemons are the registered ``ial`` / ``lru``
+    policies; use ``runtime.simulate(profile, hw, fast_bytes, 'ial')``."""
+    _deprecated("simulate_caching", f"runtime.simulate(..., {policy!r})")
+    from repro import runtime
+    return runtime.simulate(profile, hw, fast_bytes, policy,
+                            page_mode=page_mode, repeats=repeats,
+                            opts_per_step=opts_per_step)
 
-    IAL (Yan et al. ASPLOS'19): two FIFO lists (active/inactive). Pages are
-    *not* demand-migrated — a periodic optimization pass (the paper's
-    every-5-seconds daemon; here ``opts_per_step`` passes per training step)
-    promotes recently re-accessed slow pages into fast memory and demotes
-    inactive-list pages when fast memory is full. Between passes, slow pages
-    are accessed in slow memory — the detection *lag* is exactly the paper's
-    criticism, and page-grain false sharing (page_mode='original') makes the
-    promoted bytes partly useless.
-
-    LRU: same skeleton with recency ordering.
-
-    Training repeats an identical timeline; we simulate ``repeats`` steps and
-    report the last (steady state: weights and recurring-address pages have
-    been classified).
-    """
-    units = build_units(profile, "page", page_mode)
-    steps = profile.num_steps
-    t_step = _step_times(profile, hw)
-    res = SimResult(policy, 0.0, sum(t_step))
-
-    access_map: Dict[int, List[Unit]] = collections.defaultdict(list)
-    for u in units:
-        for s in u.accesses:
-            access_map[s].append(u)
-
-    in_fast: Dict[int, bool] = {u.uid: False for u in units}
-    fast_used = 0.0
-    by_uid = {u.uid: u for u in units}
-    # list state: uid -> last-touch tick; FIFO order by insertion
-    active: collections.OrderedDict = collections.OrderedDict()
-    inactive: collections.OrderedDict = collections.OrderedDict()
-    touched_since_opt: collections.OrderedDict = collections.OrderedDict()
-    seen_before: set = set()
-
-    opt_every = max(1, steps // max(1, opts_per_step))
-
-    def optimization_pass(bw_budget: float):
-        """Promote recently re-touched slow pages; demote FIFO-head pages.
-        Migration volume per pass is bounded by the elapsed-time bandwidth
-        product (parallel copy threads, Yan et al.)."""
-        nonlocal fast_used
-        moved = 0
-        for uid in list(touched_since_opt):
-            if bw_budget <= 0:
-                break
-            u = by_uid[uid]
-            if in_fast[uid]:
-                # fast page touched again: inactive -> active promotion
-                if uid in inactive:
-                    inactive.pop(uid)
-                    active[uid] = True
-                elif policy == "lru" and uid in active:
-                    active.move_to_end(uid)
-                continue
-            if uid not in seen_before:
-                continue  # second-touch rule: first sighting only classifies
-            # slow page was re-touched: candidate for promotion
-            while fast_used + u.bytes > fast_bytes and bw_budget > 0:
-                src = inactive if inactive else active
-                if not src:
-                    break
-                vid, _ = src.popitem(last=False)      # FIFO/LRU head
-                v = by_uid[vid]
-                if in_fast[vid]:
-                    in_fast[vid] = False
-                    fast_used -= v.bytes
-                    res.migrations += 1
-                    res.bytes_f2s += v.bytes
-                    bw_budget -= v.bytes
-                    moved += 1
-            if fast_used + u.bytes <= fast_bytes and bw_budget > 0:
-                in_fast[uid] = True
-                fast_used += u.bytes
-                inactive[uid] = True
-                res.migrations += 1
-                res.bytes_s2f += u.bytes
-                bw_budget -= u.bytes
-                moved += 1
-        seen_before.update(touched_since_opt)
-        touched_since_opt.clear()
-        return moved
-
-    last_rep_time = 0.0
-    for rep in range(repeats):
-        rep_time = 0.0
-        since_opt = 0.0
-        for s in range(steps):
-            bytes_slow = 0.0
-            for u in access_map.get(s, ()):
-                touched_since_opt[u.uid] = True
-                if not in_fast[u.uid]:
-                    bytes_slow += u.bytes
-                    res.slow_bytes_accessed += u.bytes
-            t_fast = max(0.0, profile.step_bytes(s) - bytes_slow)
-            t = max(profile.step_flops(s) / hw.peak_flops,
-                    t_fast / hw.fast_bw + bytes_slow / hw.slow_bw)
-            rep_time += t
-            since_opt += t
-            if (s + 1) % opt_every == 0:
-                # daemon runs on dedicated helper threads (Yan et al. use 4
-                # copy + 8 migration threads): off the critical path
-                optimization_pass(since_opt * hw.mig_bw)
-                since_opt = 0.0
-        last_rep_time = rep_time
-    res.step_time = last_rep_time
-    return res
-
-
-# ------------------------------------------------------------------ static ----
 
 def simulate_static(profile: TraceProfile, hw: HWSpec,
                     where: str = "fast") -> SimResult:
-    bw = hw.fast_bw if where == "fast" else hw.slow_bw
-    t = sum(max(profile.step_flops(s) / hw.peak_flops,
-                profile.step_bytes(s) / bw)
-            for s in range(profile.num_steps))
-    r = SimResult(f"all-{where}", t, sum(_step_times(profile, hw)))
-    return r
+    """DEPRECATED: static placement bounds are the registered ``all_fast`` /
+    ``all_slow`` policies."""
+    _deprecated("simulate_static", f"runtime.simulate(..., 'all_{where}')")
+    from repro import runtime
+    return runtime.simulate(profile, hw, 0.0, f"all_{where}")
 
 
 # ===================================================================== serve ==
 # Serving-phase trace model: prefill/decode phases over a slot-based continuous
 # batch.  The data objects are per-slot, per-layer KV *blocks* with
 # token-indexed access patterns — the inference analogue of the paper's
-# training-step objects.  Lifetimes are known exactly (a request's KV dies when
-# its slot is refilled), and the access schedule repeats every token, which is
-# precisely the structure Sentinel exploits.
+# training-step objects.
 #
 # Access model per decode step: a slot reads all blocks inside its recent
 # attention window every token; older history blocks are re-read every
@@ -564,69 +237,10 @@ def build_serve_trace(requests: Sequence[tuple], num_slots: int,
     return tr
 
 
-@dataclass
-class ServeSimResult:
-    policy: str
-    time: float                           # seconds for the whole timeline
-    tokens: int                           # decode tokens produced
-    compute_time: float                   # all-fast lower bound
-    migrations: int = 0
-    bytes_s2f: float = 0.0
-    bytes_f2s: float = 0.0
-    slow_bytes_accessed: float = 0.0
-    detail: dict = field(default_factory=dict)
-
-    @property
-    def decode_throughput(self) -> float:  # tokens / second
-        return self.tokens / max(self.time, 1e-30)
-
-    @property
-    def slowdown(self) -> float:
-        return self.time / max(self.compute_time, 1e-30)
-
-
 def simulate_serve(trace: ServeTrace, hw: HWSpec, fast_bytes: float,
                    policy: str = "sentinel", **knobs) -> ServeSimResult:
-    """Replay the serving timeline under a registered placement policy.
-
-    Per decode step: frees -> admissions (slot refill) -> decode-block births
-    -> reads (split fast/slow by the policy's placement) -> roofline step time
-    -> policy migration pass with ``step_time * mig_bw`` of off-critical-path
-    bandwidth (the paper's migration threads), plus per-migration fixed
-    overhead on the critical path.
-    """
-    from repro.core.policies import get_policy
-    pol = get_policy(policy)(trace, hw, fast_bytes, **knobs)
-    total = compute_lb = 0.0
-    tokens = 0
-    for t in range(trace.num_steps):
-        pol.on_free(t, trace.frees.get(t, ()))
-        pol.on_admit(t, trace.admits.get(t, ()))
-        pol.on_birth(t, trace.births.get(t, ()))
-        bf, bs = pol.on_reads(t, trace.reads.get(t, ()))
-        writes = trace.write_bytes(t)
-        flops = trace.active.get(t, 0) * trace.flops_per_token
-        t_step = max(flops / hw.peak_flops,
-                     (bf + writes + trace.weight_bytes) / hw.fast_bw
-                     + bs / hw.slow_bw)
-        # slot-refill prefill cost (prompt compute + KV writes, fast tier)
-        p_tok = trace.prefill_tokens.get(t, 0)
-        if p_tok:
-            t_step += max(p_tok * trace.flops_per_token / hw.peak_flops,
-                          p_tok * trace.num_layers * trace.kv_token_bytes
-                          / hw.fast_bw)
-        migs = pol.migrate(t, t_step * hw.mig_bw)
-        total += t_step + migs * hw.mig_overhead
-        compute_lb += max(flops / hw.peak_flops,
-                          (bf + bs + writes + trace.weight_bytes) / hw.fast_bw)
-        if p_tok:
-            compute_lb += max(p_tok * trace.flops_per_token / hw.peak_flops,
-                              p_tok * trace.num_layers * trace.kv_token_bytes
-                              / hw.fast_bw)
-        tokens += trace.active.get(t, 0)
-    return ServeSimResult(policy, total, tokens, compute_lb,
-                          migrations=pol.migrations, bytes_s2f=pol.bytes_s2f,
-                          bytes_f2s=pol.bytes_f2s,
-                          slow_bytes_accessed=pol.slow_bytes_accessed,
-                          detail={"fast_bytes": fast_bytes,
-                                  "peak_kv": trace.peak_kv_bytes(), **knobs})
+    """DEPRECATED: ``runtime.simulate(trace, hw, fast_bytes, policy,
+    **knobs)`` — same event loop, now shared with the training workloads."""
+    _deprecated("simulate_serve", "runtime.simulate(trace, ...)")
+    from repro import runtime
+    return runtime.simulate(trace, hw, fast_bytes, policy, **knobs)

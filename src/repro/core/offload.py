@@ -31,8 +31,8 @@ from typing import Optional
 import jax
 
 from repro.core.hardware import HWSpec, TPU_V5E
-from repro.core.planner import Plan, mi_to_periods
 from repro.core.profiler import TraceProfile
+from repro.runtime import PlacementPlan, mi_to_periods
 
 
 @dataclass(frozen=True)
@@ -72,10 +72,11 @@ def loss_kwargs(scfg: SentinelConfig) -> dict:
     }
 
 
-def from_plan(profile: TraceProfile, plan: Plan, *, hw: HWSpec = TPU_V5E,
+def from_plan(profile: TraceProfile, plan: PlacementPlan, *,
+              hw: HWSpec = TPU_V5E,
               offload_opt_state: bool = False) -> SentinelConfig:
-    """Planner output -> runtime config. The plan's MI is in timeline steps,
-    which map 1:1 to periods inside the fwd/bwd regions."""
+    """Planner output (``runtime.plan``) -> runtime config. The plan's MI is
+    in timeline steps, which map 1:1 to periods inside the fwd/bwd regions."""
     mi = mi_to_periods(profile, plan.mi)
     # round to a divisor of num_periods so the blocked scan tiles exactly
     P = profile.num_periods

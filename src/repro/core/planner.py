@@ -1,286 +1,57 @@
-"""Migration-interval planner (paper §4.4).
+"""DEPRECATED module: the planner moved to ``repro.runtime.plan``.
 
-Given one profiled training step, the planner:
-  1. computes RS(MI), Data(MI), T(MI) for every candidate interval,
-  2. prunes by the paper's two constraints,
-       space (Eq. 1):  Data(MI) < S - RS(MI)
-       time  (Eq. 2):  T(MI)    > (S - RS(MI)) / BW
-  3. evaluates surviving candidates on the HM simulator (the runtime system
-     would use one real training step per candidate — same procedure, measured
-     instead of simulated), resolving Case 3 by test-and-trial,
-  4. returns the sweet spot.
+Both halves of this module — the training migration-interval planner
+(``plan``, paper §4.4) and the decode-phase serving planner (``plan_serve``,
+Eq. 1/2 restated per token) — are now two dispatch arms of the single
+``runtime.plan`` entry point, and the legacy ``Plan`` / ``ServePlan`` result
+types are the unified, JSON-serializable ``runtime.PlacementPlan``::
 
-The same object drives the JAX offload engine: ``mi_periods`` is the layer-scan
-block size used by core/offload.py, and ``offload_uids`` the long-lived objects
-worth migrating.
+    from repro import runtime
+    plan = runtime.plan(profile_or_trace, hw, fast_bytes)
 
-The serving half of this module (``plan_serve`` / ``ServePlan``) restates
-Eq. 1/2 per decode token; where each equation lands in the code is mapped in
-``docs/ARCHITECTURE.md``.
+The wrappers below emit ``DeprecationWarning`` and return exactly what the
+new API returns.  The candidate model and the planning helpers
+(``enumerate_candidates``, ``interval_stats``, ``mi_to_periods``,
+``slot_kv_weights``, ``serve_token_stats``) are re-exported unchanged.
+Where each paper equation lands in the code is mapped in
+``docs/RUNTIME_API.md`` / ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence
 
+from repro.core import warn_deprecated
 from repro.core.hardware import HWSpec
-from repro.core.hmsim import (ServeSimResult, ServeTrace, SimResult,
-                              simulate_sentinel_tt, simulate_serve)
+from repro.core.hmsim import ServeTrace
 from repro.core.profiler import TraceProfile
+from repro.runtime.plan import (Candidate, PlacementPlan,  # noqa: F401
+                                ServeCandidate, enumerate_candidates,
+                                interval_stats, mi_to_periods,
+                                serve_token_stats, slot_kv_weights)
+from repro.runtime.plan import plan_serving as _plan_serving
+from repro.runtime.plan import plan_training as _plan_training
+
+# legacy result-type names (both were subsumed by the unified plan)
+Plan = PlacementPlan
+ServePlan = PlacementPlan
 
 
-@dataclass
-class Candidate:
-    mi: int
-    rs: float
-    data: float          # max prefetch bytes over intervals
-    t: float             # min compute seconds over intervals
-    space_ok: bool
-    time_ok: bool
-    sim: Optional[SimResult] = None
-
-
-@dataclass
-class Plan:
-    mi: int
-    stall_on_case3: bool
-    fast_bytes: float
-    candidates: List[Candidate] = field(default_factory=list)
-    sim: Optional[SimResult] = None
-    steps_used: int = 0          # "p, m & t" budget actually consumed (Table 3)
-
-    @property
-    def throughput(self) -> float:
-        return self.sim.throughput if self.sim else 0.0
-
-
-def interval_stats(profile: TraceProfile, mi: int, hw: HWSpec):
-    """(Data(MI), T(MI)) per interval: prefetch bytes needed by each interval
-    and compute time available in the preceding one."""
-    steps = profile.num_steps
-    acts = [o for o in profile.objects if o.accesses]
-    data_per: Dict[int, float] = {}
-    t_per: Dict[int, float] = {}
-    n_int = (steps + mi - 1) // mi
-    for i in range(n_int):
-        lo, hi = i * mi, min((i + 1) * mi, steps)
-        t_per[i] = sum(max(profile.step_flops(s) / hw.peak_flops,
-                           profile.step_bytes(s) / hw.fast_bw)
-                       for s in range(lo, hi))
-        data_per[i] = 0.0
-    # the final boundary step (embedding grad + optimizer) touches every
-    # weight/moment, but elementwise: it streams tile-by-tile and never needs
-    # them resident together (ZeRO-Offload-style), so it is exempt from the
-    # Eq. 1 capacity constraint (it still costs migration *time*).
-    opt_step = steps - 1
-    for o in acts:
-        if o.kind == "weight" or o.lifetime >= 2:
-            touched = sorted({a // mi for a in o.accesses if a != opt_step})
-            for i in touched:
-                # fetched for interval i (unless it was just produced there)
-                if o.kind == "weight" or o.birth // mi != i:
-                    data_per[i] += o.size
-    return data_per, t_per
-
-
-def enumerate_candidates(profile: TraceProfile, hw: HWSpec, fast_bytes: float,
-                         max_mi: Optional[int] = None) -> List[Candidate]:
-    out = []
-    steps = profile.num_steps
-    max_mi = max_mi or max(1, steps // 2)
-    for mi in range(1, max_mi + 1):
-        rs = profile.rs_bytes(mi)
-        data_per, t_per = interval_stats(profile, mi, hw)
-        data = max(data_per.values()) if data_per else 0.0
-        t = min(t_per.values()) if t_per else 0.0
-        space_ok = data < fast_bytes - rs
-        time_ok = t > data / hw.mig_bw      # tight form of Eq. 2 (see note)
-        out.append(Candidate(mi, rs, data, t, space_ok, time_ok))
-    return out
+def _deprecated(old: str):
+    warn_deprecated(f"core.planner.{old}", "runtime.plan(...)", stacklevel=4)
 
 
 def plan(profile: TraceProfile, hw: HWSpec, fast_bytes: float,
-         max_mi: Optional[int] = None, sim_all: bool = False) -> Plan:
-    """Pick the optimal migration interval.
-
-    Note on Eq. 2: the paper states T(MI) > (S - RS)/BW — the worst case of a
-    full fast-memory refill. We prune with the tighter per-interval form
-    T(MI) > Data(MI)/BW (a superset of the paper's surviving candidates) and
-    let the measured sweep decide, exactly as the paper's runtime does.
-    """
-    cands = enumerate_candidates(profile, hw, fast_bytes, max_mi)
-    survivors = [c for c in cands if c.space_ok and c.time_ok]
-    if not survivors:                        # fall back: least-bad candidates
-        survivors = [c for c in cands if c.space_ok] or cands
-    steps_used = 1                           # the profiling step
-    best: Optional[Candidate] = None
-    pool = survivors if not sim_all else cands
-    for c in pool:
-        c.sim = simulate_sentinel_tt(profile, hw, fast_bytes, c.mi)
-        steps_used += 1 + c.sim.detail.get("tt_steps_used", 0)
-        if best is None or c.sim.step_time < best.sim.step_time:
-            best = c
-    stall = best.sim.detail.get("tt_choice", "stall") != "slow-access"
-    p = Plan(mi=best.mi, stall_on_case3=stall, fast_bytes=fast_bytes,
-             candidates=cands, sim=best.sim, steps_used=steps_used)
-    return p
-
-
-def mi_to_periods(profile: TraceProfile, mi: int) -> int:
-    """Convert a timeline-step MI to layer-scan block size (periods per block)
-    for the offload engine. Timeline steps map 1:1 to periods inside the
-    forward/backward regions."""
-    return max(1, min(mi, profile.num_periods))
-
-
-# ================================================================== serving ==
-# Decode-phase planning: the paper's Eq. 1/2 restated per *token* instead of
-# per migration interval.  During decode the timeline unit is one token step,
-# the reserve pool RS is the set of open (still-filling) KV blocks, and the
-# prefetchable data per step is bounded by one token's compute time times the
-# migration bandwidth:
-#
-#   space (Eq. 1 per-token):  hot_bytes = B * W * kv_tok < S - RS_serve
-#   time  (Eq. 2 per-token):  t_token   > prefetch_bytes(L) / BW_mig
-#
-# where W is the per-slot hot window (tokens kept in fast memory) and L the
-# look-ahead (token steps of prefetch lead).  Like the training planner, the
-# candidates surviving both constraints are measured on the serve simulator
-# and the sweet spot wins.
-
-
-@dataclass
-class ServeCandidate:
-    lookahead: int
-    hot_window: int          # tokens of KV kept fast per slot
-    prefetch_bytes: float    # per-step slow->fast demand at this look-ahead
-    t_token: float           # all-fast decode step time
-    space_ok: bool
-    time_ok: bool
-    sim: Optional[ServeSimResult] = None
-
-
-@dataclass
-class ServePlan:
-    """Tiering decision for the serving runtime: ``hot_window`` tokens of each
-    slot's KV stay in fast memory (HBM); everything older is the cold prefix
-    in host memory.  ``lookahead`` drives the simulator policy's prefetch.
-
-    ``slot_hot_windows`` refines the single global window per *slot*: each
-    slot's window is sized from its own decode schedule (the byte-seconds its
-    KV objects occupy in the trace), so a slot serving short requests never
-    pins the same hot budget as one serving long ones.  ``page_tokens`` is
-    the page granularity those per-slot boundaries are quantized to — the
-    unit the paged decode kernel and the PageTable move."""
-    policy: str
-    hot_window: int
-    lookahead: int
-    fast_bytes: float
-    rs: float
-    candidates: List[ServeCandidate] = field(default_factory=list)
-    sim: Optional[ServeSimResult] = None
-    slot_hot_windows: Optional[List[int]] = None
-    page_tokens: int = 0
-
-    @property
-    def decode_throughput(self) -> float:
-        return self.sim.decode_throughput if self.sim else 0.0
-
-    def cold_len(self, max_seq: int) -> int:
-        """Cold-prefix length for a ``max_seq``-token cache buffer (global
-        boundary — the concat path)."""
-        return max(0, max_seq - self.hot_window)
-
-    def slot_window(self, slot: int) -> int:
-        """Hot-window tokens for ``slot`` (falls back to the global window)."""
-        if not self.slot_hot_windows:
-            return self.hot_window
-        return self.slot_hot_windows[slot % len(self.slot_hot_windows)]
-
-    def cold_len_slot(self, slot: int, seq_len: int,
-                      page_tokens: Optional[int] = None) -> int:
-        """Cold boundary for ``slot`` at its *current* sequence length,
-        quantized down to page granularity: tokens older than the slot's own
-        hot window, in whole pages.  Monotone in ``seq_len``, so within one
-        residency a slot's boundary only ever advances.  ``page_tokens``
-        overrides the plan's page size (the engine adjusts it to divide its
-        cache buffer)."""
-        cold = max(0, seq_len - self.slot_window(slot))
-        page = max(1, page_tokens if page_tokens else self.page_tokens)
-        return (cold // page) * page
-
-
-def slot_kv_weights(trace: ServeTrace) -> List[float]:
-    """Per-slot share of KV byte-seconds over the timeline: how much cache
-    each slot's decode schedule actually keeps alive.  The per-slot analogue
-    of the paper's per-object lifetime profile."""
-    w = [0.0] * max(1, trace.num_slots)
-    for o in trace.objects:
-        w[o.slot % len(w)] += o.bytes * (o.death - o.birth + 1)
-    total = sum(w) or 1.0
-    return [x / total for x in w]
-
-
-def serve_token_stats(trace: ServeTrace, hw: HWSpec) -> tuple:
-    """(t_token, read_bytes): all-fast decode-step time and mean per-step KV
-    read volume over the timeline — the serving analogue of interval_stats."""
-    steps = max(1, trace.num_steps)
-    read_bytes = sum(o.bytes * len(o.accesses) for o in trace.objects) / steps
-    act = sum(trace.active.get(t, 0) for t in range(steps)) / steps
-    flops = act * trace.flops_per_token
-    bw_bytes = read_bytes + trace.weight_bytes + act * trace.num_layers \
-        * trace.kv_token_bytes
-    return max(flops / hw.peak_flops, bw_bytes / hw.fast_bw), read_bytes
+         max_mi: Optional[int] = None, sim_all: bool = False) -> PlacementPlan:
+    """DEPRECATED: ``runtime.plan(profile, hw, fast_bytes, ...)``."""
+    _deprecated("plan")
+    return _plan_training(profile, hw, fast_bytes, max_mi=max_mi,
+                          sim_all=sim_all)
 
 
 def plan_serve(trace: ServeTrace, hw: HWSpec, fast_bytes: float,
                lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
-               policy: str = "sentinel") -> ServePlan:
-    """Pick the hot window and prefetch look-ahead for serving-time tiering."""
-    rs = trace.rs_bytes()
-    budget = max(0.0, fast_bytes - rs)
-    kv_tok_all = trace.num_layers * trace.kv_token_bytes
-    slots = max(1, trace.num_slots)
-    # floor: the open, still-filling block per slot is fast by construction
-    # (it IS the reserve pool), so the hot window is never below one block
-    hot_window = max(trace.block_tokens,
-                     int(budget / (slots * kv_tok_all))) if kv_tok_all else 0
-    t_token, _ = serve_token_stats(trace, hw)
-    cold_bytes = max(0.0, trace.peak_kv_bytes() - budget)
-    # Eq. 1 per-token: the hot windows plus the reserve pool must fit (the
-    # floor above can violate this when fast memory is tiny)
-    space_ok = rs + slots * hot_window * kv_tok_all <= fast_bytes
-
-    cands: List[ServeCandidate] = []
-    for la in sorted(set(lookaheads)):
-        # history blocks re-read every history_period steps: within a
-        # look-ahead of L steps, L/period of the cold set must be prefetched,
-        # against L steps' worth of migration bandwidth (Eq. 2 per-token)
-        prefetch = cold_bytes * min(1.0, la / max(1, trace.history_period))
-        cands.append(ServeCandidate(la, hot_window, prefetch, t_token,
-                                    space_ok=space_ok,
-                                    time_ok=t_token * la * hw.mig_bw
-                                    >= prefetch))
-    # measure survivors on the simulator (fall back to everything when the
-    # constraints kill all candidates, mirroring the training planner)
-    pool = [c for c in cands if c.space_ok and c.time_ok] or cands
-    best: Optional[ServeCandidate] = None
-    for c in pool:
-        c.sim = simulate_serve(trace, hw, fast_bytes, policy,
-                               lookahead=c.lookahead)
-        if best is None or c.sim.decode_throughput > best.sim.decode_throughput:
-            best = c
-
-    # Eq. 1 refined per slot: distribute the hot-token budget in proportion
-    # to each slot's own decode schedule (KV byte-seconds), floor one block
-    # (its open block is the reserve pool), quantized to block==page units.
-    blk = max(1, trace.block_tokens)
-    budget_tokens = budget / kv_tok_all if kv_tok_all else 0.0
-    weights = slot_kv_weights(trace)
-    slot_windows = [max(blk, (int(budget_tokens * w) // blk) * blk)
-                    for w in weights]
-
-    return ServePlan(policy=policy, hot_window=best.hot_window,
-                     lookahead=best.lookahead, fast_bytes=fast_bytes, rs=rs,
-                     candidates=cands, sim=best.sim,
-                     slot_hot_windows=slot_windows, page_tokens=blk)
+               policy: str = "sentinel") -> PlacementPlan:
+    """DEPRECATED: ``runtime.plan(trace, hw, fast_bytes, ...)``."""
+    _deprecated("plan_serve")
+    return _plan_serving(trace, hw, fast_bytes, policy=policy,
+                         lookaheads=lookaheads)

@@ -1,368 +1,42 @@
-"""Pluggable placement/migration policies for serving-time KV-cache tiering.
+"""DEPRECATED module: the policy registry moved to ``repro.runtime.policies``.
 
-Sentinel's training-time argument — object-granular placement wins because the
-runtime knows object lifetimes from the workload's repeatable structure —
-transfers to inference serving: per-slot, per-layer KV blocks are exactly the
-"large amount of small data objects" of the paper, and the decode phase
-repeats its access pattern every token. A policy decides, per KV block object
-(or per page packing many objects), which tier it lives in and what migrates
-between decode steps.
+This shim re-exports the unified registry so existing imports keep working —
+``POLICIES`` is the *same* dict object as the runtime's, so policies
+registered through either path are visible to both.  The registry now also
+carries the training-native policies (``sentinel_mi``, ``ial``, ``lru``,
+``all_fast``, ``all_slow``) next to the serving trio (``prefer_fast``,
+``lru_page``, ``sentinel``), and every one of them runs on every workload::
 
-The policy families mirror the placement/migration strategy space of
-Data_Placement_Optimization (PreferHBM / look-ahead batch migration) and the
-page-grain reactive daemons (IAL/LRU) the paper compares against:
+    from repro import runtime
+    runtime.simulate(trace_or_profile, hw, fast_bytes, "sentinel")
 
-  prefer_fast  static object-grain PreferHBM: born fast while room remains,
-               never migrated.  Weakness: once fast fills with old-but-alive
-               history, fresh hot blocks are stuck slow.
-  lru_page     page-grain reactive LRU: objects bump-packed into pages in
-               birth order (mixing slots/layers — false sharing), periodic
-               promotion of re-touched slow pages, LRU demotion.  Weakness:
-               detection lag + dead bytes of refilled slots ride along in
-               every promoted page.
-  sentinel     lifetime-aware object policy: next accesses are *known* (the
-               decode schedule is repeatable), so it prefetches the KV blocks
-               needed in the next ``lookahead`` steps and evicts blocks whose
-               next access is farthest — Belady with real lifetime knowledge,
-               at object granularity.
-
-Policies register themselves in ``POLICIES`` via the ``@register_policy``
-decorator; the simulator (``hmsim.simulate_serve``), the decode-phase
-planner (``planner.plan_serve``) and ``benchmarks/bench_serve.py`` all
-dispatch by name, so a new policy is benchmarkable the moment it is
-registered.  Reference documentation — hook protocol, per-policy semantics,
-the incumbent tie-breaking rule in ``sentinel.migrate`` — lives in
-``docs/POLICIES.md``.
+Reference documentation — hook protocol, per-policy semantics, the incumbent
+tie-breaking rule — lives in ``docs/POLICIES.md``; the migration guide in
+``docs/RUNTIME_API.md``.
 """
 from __future__ import annotations
 
-import bisect
-import collections
-from typing import Dict, Iterable, List, Optional, Type
+from typing import List, Type
 
-PAGE_BYTES = 2 << 20          # huge-page granularity for page-grain baselines
+from repro.runtime.policies import (PAGE_BYTES, POLICIES,  # noqa: F401
+                                    LRUPage, PlacementPolicy, PreferFast,
+                                    SentinelLifetime, register_policy)
+from repro.runtime.policies import get_policy as _get_policy
+from repro.runtime.policies import list_policies as _list_policies
 
-POLICIES: Dict[str, Type["ServePolicy"]] = {}
-
-
-def register_policy(name: str):
-    """Class decorator: add a ServePolicy subclass to the registry."""
-    def deco(cls):
-        cls.name = name
-        POLICIES[name] = cls
-        return cls
-    return deco
+# legacy names
+ServePolicy = PlacementPolicy
+SentinelServe = SentinelLifetime
 
 
-def get_policy(name: str) -> Type["ServePolicy"]:
+def get_policy(name: str) -> Type[PlacementPolicy]:
+    """Thin wrapper over ``runtime.get_policy`` (legacy error message)."""
     try:
-        return POLICIES[name]
+        return _get_policy(name)
     except KeyError:
         raise KeyError(f"unknown serve policy {name!r}; "
                        f"registered: {sorted(POLICIES)}") from None
 
 
 def list_policies() -> List[str]:
-    return sorted(POLICIES)
-
-
-class ServePolicy:
-    """Base: tracks placement (uid -> in fast?) and fast occupancy; charges
-    migrations.  Subclasses override the hooks they care about.
-
-    Hook order per decode step t (driven by hmsim.simulate_serve):
-      on_free(t, objs)      blocks of completed requests disappear
-      on_admit(t, objs)     prefill blocks of a refilled slot are born
-      on_birth(t, objs)     decode blocks completed this step are born
-      on_reads(t, objs)     -> (bytes_fast, bytes_slow) for this step's reads
-      migrate(t, budget)    -> #migrations, off-critical-path volume capped
-                               by budget (= step_time * mig_bw)
-    """
-
-    name = "base"
-    granularity = "object"
-
-    def __init__(self, trace, hw, fast_bytes: float, **knobs):
-        self.trace, self.hw, self.fast_bytes = trace, hw, float(fast_bytes)
-        self.knobs = knobs
-        self.in_fast: Dict[int, bool] = {}
-        self.live: Dict[int, object] = {}
-        self.fast_used = 0.0
-        self.migrations = 0
-        self.bytes_s2f = 0.0
-        self.bytes_f2s = 0.0
-        self.slow_bytes_accessed = 0.0
-
-    # ------------------------------------------------------------- helpers --
-    def _place(self, o, fast: bool):
-        self.live[o.uid] = o
-        self.in_fast[o.uid] = fast
-        if fast:
-            self.fast_used += o.bytes
-
-    def _demote(self, o):
-        if self.in_fast.get(o.uid):
-            self.in_fast[o.uid] = False
-            self.fast_used -= o.bytes
-            self.migrations += 1
-            self.bytes_f2s += o.bytes
-
-    def _promote(self, o):
-        if not self.in_fast.get(o.uid):
-            self.in_fast[o.uid] = True
-            self.fast_used += o.bytes
-            self.migrations += 1
-            self.bytes_s2f += o.bytes
-
-    # --------------------------------------------------------------- hooks --
-    def on_free(self, t: int, objs: Iterable) -> None:
-        for o in objs:
-            if self.in_fast.pop(o.uid, False):
-                self.fast_used -= o.bytes
-            self.live.pop(o.uid, None)
-
-    def on_admit(self, t: int, objs: Iterable) -> None:
-        for o in objs:
-            self._place(o, self.fast_used + o.bytes <= self.fast_bytes)
-
-    def on_birth(self, t: int, objs: Iterable) -> None:
-        # decode blocks were just written by compute (fast-resident RS pool);
-        # they stay fast if room remains, else they spill at birth
-        self.on_admit(t, objs)
-
-    def on_reads(self, t: int, objs: Iterable):
-        bf = bs = 0.0
-        for o in objs:
-            if self.in_fast.get(o.uid, False):
-                bf += o.bytes
-            else:
-                bs += o.bytes
-        self.slow_bytes_accessed += bs
-        return bf, bs
-
-    def migrate(self, t: int, budget_bytes: float) -> int:
-        return 0
-
-
-@register_policy("prefer_fast")
-class PreferFast(ServePolicy):
-    """Static PreferHBM: fast while room remains, no migration ever."""
-
-
-@register_policy("lru_page")
-class LRUPage(ServePolicy):
-    """Page-grain reactive LRU with bump allocation (false sharing).
-
-    Objects are packed into ``page_bytes`` pages in birth order, interleaving
-    slots and layers exactly like a bump allocator does.  Placement and
-    migration are per *page*: a promoted page carries every byte it packs,
-    dead or alive; a page's fast space is only reclaimed when all members died
-    or when the page is demoted.  Promotion is reactive: a slow page touched
-    since the last step becomes a candidate; the least-recently-touched fast
-    pages are demoted to make room.
-    """
-
-    granularity = "page"
-
-    class _Page:
-        __slots__ = ("pid", "members", "live_bytes", "in_fast", "last_touch")
-
-        def __init__(self, pid):
-            self.pid = pid
-            self.members: list = []
-            self.live_bytes = 0.0
-            self.in_fast = False
-            self.last_touch = -1
-
-    def __init__(self, trace, hw, fast_bytes, *, page_bytes: int = PAGE_BYTES,
-                 **knobs):
-        super().__init__(trace, hw, fast_bytes, **knobs)
-        self.page_bytes = float(page_bytes)
-        self.pages: List[LRUPage._Page] = []
-        self.page_of: Dict[int, LRUPage._Page] = {}
-        self._open: Optional[LRUPage._Page] = None
-        self._open_fill = 0.0
-        self._touched_slow: "collections.OrderedDict" = collections.OrderedDict()
-
-    def _alloc(self, o):
-        if self._open is None or self._open_fill + o.bytes > self.page_bytes:
-            pg = LRUPage._Page(len(self.pages))
-            pg.in_fast = self.fast_used + self.page_bytes <= self.fast_bytes
-            if pg.in_fast:
-                self.fast_used += self.page_bytes
-            self.pages.append(pg)
-            self._open, self._open_fill = pg, 0.0
-        pg = self._open
-        pg.members.append(o)
-        pg.live_bytes += o.bytes
-        self._open_fill += o.bytes
-        self.page_of[o.uid] = pg
-        self.live[o.uid] = o
-        self.in_fast[o.uid] = pg.in_fast
-
-    def on_admit(self, t, objs):
-        for o in objs:
-            self._alloc(o)
-
-    on_birth = on_admit
-
-    def on_free(self, t, objs):
-        for o in objs:
-            pg = self.page_of.pop(o.uid, None)
-            self.live.pop(o.uid, None)
-            self.in_fast.pop(o.uid, None)
-            if pg is None:
-                continue
-            pg.live_bytes -= o.bytes
-            if pg.live_bytes <= 0 and pg is not self._open:
-                # fully dead page: space reclaimed (only now — false sharing
-                # kept the dead bytes resident until the last member died)
-                if pg.in_fast:
-                    self.fast_used -= self.page_bytes
-                pg.in_fast = False
-
-    def on_reads(self, t, objs):
-        bf = bs = 0.0
-        for o in objs:
-            pg = self.page_of[o.uid]
-            pg.last_touch = t
-            if pg.in_fast:
-                bf += o.bytes
-            else:
-                bs += o.bytes
-                self._touched_slow[pg.pid] = pg
-        self.slow_bytes_accessed += bs
-        return bf, bs
-
-    def migrate(self, t, budget_bytes):
-        moved = 0
-        # most recently touched slow pages first (reactive promotion)
-        for pid in reversed(list(self._touched_slow)):
-            pg = self._touched_slow.pop(pid)
-            if pg.live_bytes <= 0 or budget_bytes < self.page_bytes:
-                continue
-            # demote LRU fast pages until the candidate fits
-            while self.fast_used + self.page_bytes > self.fast_bytes and \
-                    budget_bytes >= self.page_bytes:
-                victims = [p for p in self.pages
-                           if p.in_fast and p.live_bytes > 0]
-                if not victims:
-                    break
-                v = min(victims, key=lambda p: p.last_touch)
-                if v.last_touch >= pg.last_touch:
-                    break                      # nothing colder than candidate
-                v.in_fast = False
-                self.fast_used -= self.page_bytes
-                for m in v.members:
-                    if m.uid in self.in_fast:
-                        self.in_fast[m.uid] = False
-                budget_bytes -= self.page_bytes
-                self.migrations += 1
-                self.bytes_f2s += self.page_bytes
-                moved += 1
-            if self.fast_used + self.page_bytes <= self.fast_bytes and \
-                    budget_bytes >= self.page_bytes:
-                pg.in_fast = True
-                self.fast_used += self.page_bytes
-                for m in pg.members:
-                    if m.uid in self.in_fast:
-                        self.in_fast[m.uid] = True
-                budget_bytes -= self.page_bytes
-                self.migrations += 1
-                self.bytes_s2f += self.page_bytes
-                moved += 1
-        self._touched_slow.clear()
-        return moved
-
-
-@register_policy("sentinel")
-class SentinelServe(ServePolicy):
-    """Lifetime-aware object policy with look-ahead prefetch.
-
-    The decode schedule is known (the serving analogue of the paper's
-    repeatable training timeline), so each object's exact next access is
-    available.  Every step the policy (a) prefetches objects whose next access
-    falls within ``lookahead`` steps, (b) evicts the objects whose next access
-    is farthest away (or never) to make room — per-token Belady at object
-    granularity, bandwidth-capped like the paper's migration threads.
-    """
-
-    def __init__(self, trace, hw, fast_bytes, *, lookahead: int = 8, **knobs):
-        super().__init__(trace, hw, fast_bytes, **knobs)
-        self.lookahead = max(1, int(lookahead))
-
-    @staticmethod
-    def _next_access(o, t: int) -> Optional[int]:
-        i = bisect.bisect_right(o.accesses, t)
-        return o.accesses[i] if i < len(o.accesses) else None
-
-    def _score(self, o, t: int) -> int:
-        """Known accesses within the look-ahead horizon (per-token Eq. 2:
-        this is the reuse the migration bandwidth can still buy back)."""
-        lo = bisect.bisect_right(o.accesses, t)
-        hi = bisect.bisect_right(o.accesses, t + self.lookahead)
-        return hi - lo
-
-    def _evict_for(self, need: float, t: int) -> None:
-        """Make room by evicting farthest-next-access fast objects (Belady
-        on the known schedule)."""
-        if self.fast_used + need <= self.fast_bytes:
-            return
-        victims = [o for o in self.live.values() if self.in_fast.get(o.uid)]
-        victims.sort(key=lambda o: -(self._next_access(o, t) or 10 ** 12))
-        for v in victims:
-            if self.fast_used + need <= self.fast_bytes:
-                break
-            self._demote(v)
-
-    def on_admit(self, t, objs):
-        # placement at birth is free (data is written to its tier directly):
-        # hot-window blocks displace colder incumbents, cold prefix is born
-        # slow — the serving analogue of "born in fast" vs residual offload
-        for o in objs:
-            if self._score(o, t - 1) == 0:
-                self._place(o, False)
-                continue
-            self._evict_for(o.bytes, t)
-            self._place(o, self.fast_used + o.bytes <= self.fast_bytes)
-
-    on_birth = on_admit
-
-    def migrate(self, t, budget_bytes):
-        migs0 = self.migrations
-        live = list(self.live.values())
-        scored = [(self._score(o, t), o) for o in live]
-        # desired fast set: greedy by score; incumbents win ties so
-        # equal-rate history blocks never ping-pong between tiers
-        scored.sort(key=lambda p: (-p[0], not self.in_fast.get(p[1].uid),
-                                   p[1].uid))
-        target = set()
-        used = 0.0
-        for sc, o in scored:
-            if sc <= 0:
-                break
-            if used + o.bytes <= self.fast_bytes:
-                target.add(o.uid)
-                used += o.bytes
-        promotes = [o for sc, o in scored
-                    if o.uid in target and not self.in_fast.get(o.uid)]
-        promotes.sort(key=lambda o: self._next_access(o, t) or 10 ** 12)
-        for o in promotes:
-            if o.bytes > budget_bytes:
-                break
-            while self.fast_used + o.bytes > self.fast_bytes:
-                victims = [v for v in live if self.in_fast.get(v.uid)
-                           and v.uid not in target]
-                if not victims:
-                    break
-                v = min(victims, key=lambda v: self._score(v, t))
-                if v.bytes > budget_bytes:
-                    budget_bytes = -1.0
-                    break
-                self._demote(v)
-                budget_bytes -= v.bytes
-            if budget_bytes < 0 or self.fast_used + o.bytes > self.fast_bytes:
-                break
-            self._promote(o)
-            budget_bytes -= o.bytes
-        return self.migrations - migs0
+    return _list_policies()

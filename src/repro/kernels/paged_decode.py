@@ -150,26 +150,23 @@ def paged_decode_attention(q, k_hot, v_hot, k_cold, v_cold, page_table,
     return out.reshape(B, H, D)
 
 
-def pack_kv_pools(k_cache, v_cache, cold_tokens, page_tokens: int):
-    """Pack dense caches (B, S, KVH, D) into the paged pool layout.
+def pool_layout(cold_tokens, num_pages: int, page_tokens: int):
+    """Layer-independent pool layout from per-slot cold boundaries.
 
-    ``cold_tokens`` (B,): per-slot cold boundary in tokens; pages fully below
-    the boundary go to the cold pool.  Physical page order deliberately
-    interleaves slots (slot-major over logical pages) so tests exercise real
-    indirection rather than an identity table.  Returns
-    (k_hot, v_hot, k_cold, v_cold, page_table, page_tier).
+    ``cold_tokens`` (len B, concrete ints): per-slot cold boundary in tokens;
+    pages fully below the boundary go to the cold pool.  Physical page order
+    deliberately interleaves slots (slot-major over logical pages) so tests
+    exercise real indirection rather than an identity table.  Returns
+    (page_table, page_tier, hot_idx, cold_idx) where the idx tuples list the
+    (slot, logical_page) each physical pool page holds, in pool order —
+    compute once per decode step, then gather every layer's pools from it.
     """
-    B, S, KVH, D = k_cache.shape
-    assert S % page_tokens == 0, (S, page_tokens)
-    NP = S // page_tokens
-    kp = k_cache.reshape(B, NP, page_tokens, KVH, D)
-    vp = v_cache.reshape(B, NP, page_tokens, KVH, D)
+    B = len(cold_tokens)
     cold_pages = [int(c) // page_tokens for c in cold_tokens]
-
     hot_idx, cold_idx = [], []            # (b, i) per physical page, in order
-    table = [[0] * NP for _ in range(B)]
-    tier = [[0] * NP for _ in range(B)]
-    for i in range(NP):                   # slot-major interleave
+    table = [[0] * num_pages for _ in range(B)]
+    tier = [[0] * num_pages for _ in range(B)]
+    for i in range(num_pages):            # slot-major interleave
         for b in range(B):
             if i < cold_pages[b]:
                 table[b][i], tier[b][i] = len(cold_idx), 1
@@ -177,6 +174,19 @@ def pack_kv_pools(k_cache, v_cache, cold_tokens, page_tokens: int):
             else:
                 table[b][i], tier[b][i] = len(hot_idx), 0
                 hot_idx.append((b, i))
+    return (jnp.asarray(table, jnp.int32), jnp.asarray(tier, jnp.int32),
+            tuple(hot_idx), tuple(cold_idx))
+
+
+def gather_pools(k_cache, v_cache, layout, page_tokens: int):
+    """One layer's (k_hot, v_hot, k_cold, v_cold) pools for a shared layout.
+    k_cache/v_cache: dense (B, S, KVH, D)."""
+    B, S, KVH, D = k_cache.shape
+    assert S % page_tokens == 0, (S, page_tokens)
+    NP = S // page_tokens
+    _, _, hot_idx, cold_idx = layout
+    kp = k_cache.reshape(B, NP, page_tokens, KVH, D)
+    vp = v_cache.reshape(B, NP, page_tokens, KVH, D)
 
     def gather(pages, idx):
         if not idx:
@@ -186,5 +196,14 @@ def pack_kv_pools(k_cache, v_cache, cold_tokens, page_tokens: int):
         return pages[bs, ps]
 
     return (gather(kp, hot_idx), gather(vp, hot_idx),
-            gather(kp, cold_idx), gather(vp, cold_idx),
-            jnp.asarray(table, jnp.int32), jnp.asarray(tier, jnp.int32))
+            gather(kp, cold_idx), gather(vp, cold_idx))
+
+
+def pack_kv_pools(k_cache, v_cache, cold_tokens, page_tokens: int):
+    """Pack dense caches (B, S, KVH, D) into the paged pool layout.  Returns
+    (k_hot, v_hot, k_cold, v_cold, page_table, page_tier); convenience over
+    pool_layout + gather_pools for single-layer callers and tests."""
+    layout = pool_layout(cold_tokens, k_cache.shape[1] // page_tokens,
+                         page_tokens)
+    return (*gather_pools(k_cache, v_cache, layout, page_tokens),
+            layout[0], layout[1])

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config, list_archs
-from repro.core import planner, profiler
+from repro import runtime
+from repro.core import profiler
 from repro.core.hardware import TPU_V5E
 from repro.core.offload import SentinelConfig, from_plan
 from repro.data.pipeline import DataConfig
@@ -68,7 +69,7 @@ def main():
             jax.grad(lambda p, bb: model.loss_fn(p, cfg, bb,
                                                  unroll_periods=True)),
             pshapes, b, num_periods=cfg.num_periods)
-        plan = planner.plan(prof, TPU_V5E, args.fast_frac * prof.peak_bytes())
+        plan = runtime.plan(prof, TPU_V5E, args.fast_frac * prof.peak_bytes())
         scfg = dataclasses.replace(from_plan(prof, plan), mode=args.mode)
         print(f"[train] profiled {len(prof.objects)} data objects; "
               f"planned MI={plan.mi} steps -> {scfg.mi_periods} periods "

@@ -60,8 +60,12 @@ def _inputs_to_h(params, cfg, batch):
 def forward(params, cfg, batch, *, caches=None, cache_index=None,
             decode: bool = False, remat_policy=None, unroll_periods: bool = False,
             mi_periods: int = 1, tag_block_out: bool = False,
-            positions=None) -> Tuple[jax.Array, Any, jax.Array]:
-    """Returns (logits, new_caches, aux_loss)."""
+            positions=None, paged_view=None) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (logits, new_caches, aux_loss).
+
+    paged_view: with ``cfg.use_paged_decode``, the serving engine's page
+    layout ({"boundaries", "page_tokens"}); decode attention then reads KV
+    through the tiered page pools (models/attention._paged_decode_core)."""
     with jax.named_scope("boundary_in"):
         if decode:
             x = embed(params["embed"], cfg, batch["tokens"])
@@ -77,7 +81,7 @@ def forward(params, cfg, batch, *, caches=None, cache_index=None,
         params["stack"], cfg, x, positions, caches=caches,
         cache_index=cache_index, decode=decode, remat_policy=remat_policy,
         unroll_periods=unroll_periods, mi_periods=mi_periods,
-        tag_block_out=tag_block_out)
+        tag_block_out=tag_block_out, paged_view=paged_view)
 
     with jax.named_scope("boundary_head"):
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps, plus_one=True)

@@ -94,7 +94,8 @@ def init_stack(key, cfg, dtype):
 # ----------------------------------------------------------------- apply ----
 
 def apply_block(params, cfg, kind: str, x, positions, *, cache=None,
-                cache_index=None, decode=False, dense_ff: int = 0):
+                cache_index=None, decode=False, dense_ff: int = 0,
+                paged_view=None):
     """One layer. Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind in (ATTN, LOCAL, SHARED_ATTN, MLA):
@@ -110,7 +111,7 @@ def apply_block(params, cfg, kind: str, x, positions, *, cache=None,
             a, new_cache = attn_mod.attention(
                 params["attn"], cfg, h, positions,
                 kind=ATTN if kind == SHARED_ATTN else kind,
-                cache=cache, cache_index=cache_index)
+                cache=cache, cache_index=cache_index, paged_view=paged_view)
         x = x + a
         h = rmsnorm(x, params["ln2"], cfg.norm_eps, plus_one=True)
         h = constrain(h, ("batch", "seq", "embed"))
@@ -143,7 +144,7 @@ def apply_block(params, cfg, kind: str, x, positions, *, cache=None,
 
 
 def _period_body(cfg, stack_params, shared_params, x, positions, caches,
-                 cache_index, decode):
+                 cache_index, decode, paged_view=None):
     """Apply one period (all slots in order). caches: list per slot or None."""
     new_caches: List[Any] = []
     aux_total = jnp.zeros((), jnp.float32)
@@ -151,7 +152,8 @@ def _period_body(cfg, stack_params, shared_params, x, positions, caches,
         p = shared_params if kind == SHARED_ATTN else stack_params[s]
         c = caches[s] if caches is not None else None
         x, nc, aux = apply_block(p, cfg, kind, x, positions, cache=c,
-                                 cache_index=cache_index, decode=decode)
+                                 cache_index=cache_index, decode=decode,
+                                 paged_view=paged_view)
         new_caches.append(nc)
         aux_total = aux_total + aux
     return x, new_caches, aux_total
@@ -160,7 +162,7 @@ def _period_body(cfg, stack_params, shared_params, x, positions, caches,
 def stack_forward(params, cfg, x, positions, *, caches=None, cache_index=None,
                   decode: bool = False, remat_policy=None,
                   unroll_periods: bool = False, mi_periods: int = 1,
-                  tag_block_out: bool = False):
+                  tag_block_out: bool = False, paged_view=None):
     """Run prologue + scanned periods.
 
     params: raw value tree (Param wrappers stripped). caches: {"prologue": [...],
@@ -184,7 +186,8 @@ def stack_forward(params, cfg, x, positions, *, caches=None, cache_index=None,
             c = caches["prologue"][i] if caches is not None else None
             x, nc, aux = apply_block(params["prologue"][i], cfg, kind, x, positions,
                                      cache=c, cache_index=cache_index, decode=decode,
-                                     dense_ff=cfg.prologue_d_ff)
+                                     dense_ff=cfg.prologue_d_ff,
+                                     paged_view=paged_view)
             new_pro.append(nc)
             aux_total = aux_total + aux
 
@@ -201,7 +204,7 @@ def stack_forward(params, cfg, x, positions, *, caches=None, cache_index=None,
                    for sc in slot_caches] if slot_caches is not None else None)
             with jax.named_scope(f"period_{pidx}"):
                 x, ncs, aux = _period_body(cfg, pp, shared, x, positions, cc,
-                                           cache_index, decode)
+                                           cache_index, decode, paged_view)
             aux_total = aux_total + aux
             if new_slot_caches is not None:
                 new_slot_caches.append(ncs)
@@ -216,7 +219,7 @@ def stack_forward(params, cfg, x, positions, *, caches=None, cache_index=None,
         x, aux = carry
         sp, sc = inputs
         x, ncs, a = _period_body(cfg, sp, shared, x, positions, sc,
-                                 cache_index, decode)
+                                 cache_index, decode, paged_view)
         return (x, aux + a), ncs
 
     xs = (slot_params, slot_caches if slot_caches is not None

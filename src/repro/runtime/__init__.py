@@ -1,0 +1,50 @@
+"""Sentinel's unified runtime API: one profile -> plan -> migrate surface.
+
+The repo implements the paper's idea for two workload families — training
+(activation/weight offload over migration intervals) and serving (KV-cache
+tiering over decode tokens).  This package is the single surface both dispatch
+through:
+
+    from repro import runtime
+
+    # any workload: a profiler TraceProfile or an hmsim ServeTrace
+    plan   = runtime.plan(workload, hw, fast_bytes)          # PlacementPlan
+    result = runtime.simulate(workload, hw, fast_bytes, "sentinel")
+
+    plan.to_json()                 # bit-stable round trip via from_json
+    runtime.list_policies()        # every policy runs on every workload
+
+Layout:
+  objects.py   MemoryTier / DataObject / AccessTimeline / Workload protocol
+               (+ the TraceProfile / ServeTrace adapters)
+  policies.py  the one policy registry and the PlacementResult they return
+  plan.py      runtime.plan and the serializable PlacementPlan
+  synthetic.py deterministic synthetic workloads (golden tests, benchmarks)
+
+The legacy entry points (``core.planner.plan`` / ``plan_serve``,
+``core.policies``, ``core.hmsim.simulate_*``) remain as deprecation shims —
+thin wrappers over this package; see ``docs/RUNTIME_API.md`` for the
+contract and the migration guide.
+"""
+from repro.runtime.objects import (AccessTimeline, DataObject, MemoryTier,
+                                   ServingWorkload, TrainingWorkload,
+                                   Workload, as_workload, tiers_from_hw)
+from repro.runtime.plan import (Candidate, PlacementPlan, ServeCandidate,
+                                enumerate_candidates, interval_stats,
+                                mi_to_periods, plan, plan_serving,
+                                plan_training, serve_token_stats,
+                                slot_kv_weights)
+from repro.runtime.policies import (PAGE_BYTES, POLICIES, PlacementPolicy,
+                                    PlacementResult, Unit, build_units,
+                                    get_policy, list_policies,
+                                    register_policy, simulate)
+
+__all__ = [
+    "AccessTimeline", "Candidate", "DataObject", "MemoryTier", "PAGE_BYTES",
+    "POLICIES", "PlacementPlan", "PlacementPolicy", "PlacementResult",
+    "ServeCandidate", "ServingWorkload", "TrainingWorkload", "Unit",
+    "Workload", "as_workload", "build_units", "enumerate_candidates",
+    "get_policy", "interval_stats", "list_policies", "mi_to_periods", "plan",
+    "plan_serving", "plan_training", "register_policy", "serve_token_stats",
+    "simulate", "slot_kv_weights", "tiers_from_hw",
+]

@@ -1,0 +1,270 @@
+"""Unified tier/trace model: the one object-granular view of a workload.
+
+Sentinel's core claim is a single idea — repeatable workloads let the runtime
+place *data objects* (not pages) across memory tiers using known lifetimes.
+This module is the shared vocabulary both workload families speak:
+
+  MemoryTier      a named tier (bandwidth + capacity) derived from an HWSpec.
+  DataObject      one placeable allocation: bytes, birth/death, and a
+                  step-indexed access schedule.  Training long-lived
+                  activations/weights and serving KV blocks are both
+                  DataObjects (serving reuses ``hmsim.KVObject`` directly —
+                  anything with uid/bytes/birth/death/accesses qualifies).
+  AccessTimeline  the fully resolved replayable timeline: per-step compute
+                  and traffic, object birth/free/read events, and the
+                  reserve-pool accounting of paper §4.3.
+  Workload        the protocol both stacks adapt into: ``TrainingWorkload``
+                  wraps a profiler ``TraceProfile`` (timeline steps = layer
+                  steps of one training iteration), ``ServingWorkload`` wraps
+                  an ``hmsim.ServeTrace`` (timeline steps = decode tokens).
+                  Phase/step semantics of each source are preserved — the
+                  adapters translate, they do not approximate.
+
+Every placement policy in ``runtime/policies.py`` and the unified planner in
+``runtime/plan.py`` consume only this model, which is what makes every policy
+benchmarkable on every workload.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+
+from repro.core.hardware import HWSpec
+
+
+@dataclass(frozen=True)
+class MemoryTier:
+    """One memory tier. ``capacity`` None means unbounded (the slow tier)."""
+    name: str
+    bandwidth: float                 # read bandwidth, B/s
+    capacity: Optional[float] = None
+
+
+def tiers_from_hw(hw: HWSpec, fast_bytes: float) -> List[MemoryTier]:
+    """The two-tier model every policy assumes: fast (HBM / near DRAM,
+    capacity-limited) over slow (host / far DRAM, unbounded)."""
+    return [MemoryTier("fast", hw.fast_bw, float(fast_bytes)),
+            MemoryTier("slow", hw.slow_bw, None)]
+
+
+@dataclass
+class DataObject:
+    """A placeable data object on the unified timeline.
+
+    Serving KV blocks (``hmsim.KVObject``) are consumed duck-typed — the
+    policies only touch ``uid``/``bytes``/``birth``/``death``/``accesses`` —
+    so this class is instantiated for training-derived timelines and any
+    synthetic workloads."""
+    uid: int
+    bytes: int
+    birth: int
+    death: int
+    accesses: List[int] = field(default_factory=list)   # sorted step indices
+    kind: str = "object"            # "weight" | "activation" | "kv" | ...
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def lifetime(self) -> int:
+        return max(0, self.death - self.birth)
+
+
+@dataclass
+class AccessTimeline:
+    """The resolved replayable timeline of one workload.
+
+    Per-step scalars (length ``num_steps``):
+      flops            compute issued at the step
+      total_bytes      all memory traffic of the step (roofline numerator)
+      fixed_fast_bytes traffic always charged to the fast tier no matter the
+                       placement (KV writes + weight streaming in serving;
+                       reserve-pool/fused traffic in training) — the policies
+                       only ever move ``total - fixed`` between tiers
+      tokens           units of work completed (decode tokens; 0 in training)
+      extra_flops/extra_fast_bytes
+                       off-timeline work folded into the step (slot-refill
+                       prefill in serving; zero in training)
+
+    ``admits``/``births``/``frees``/``reads`` are the per-step event lists the
+    event-driven policies replay, in the exact order the source trace resolved
+    them.  ``reserved_bytes`` is fast memory pre-committed outside the object
+    set (training short-lived pool, §4.3); serving reserves through the open
+    KV blocks which *are* timeline objects, so it is 0 there.
+    """
+    kind: str                       # "training" | "serving"
+    num_steps: int
+    objects: List[Any]
+    flops: List[float]
+    total_bytes: List[float]
+    fixed_fast_bytes: List[float]
+    tokens: List[int]
+    extra_flops: List[float]
+    extra_fast_bytes: List[float]
+    admits: Dict[int, List[Any]]
+    births: Dict[int, List[Any]]
+    frees: Dict[int, List[Any]]
+    reads: Dict[int, List[Any]]
+    reserved_bytes: float = 0.0
+    source: Any = None              # the TraceProfile / ServeTrace adapted
+
+    def timeline(self) -> "AccessTimeline":
+        """A timeline is its own Workload (lets policies re-dispatch)."""
+        return self
+
+    def reserve_bytes(self, mi: int = 1) -> float:
+        """RS(MI) of paper §4.3 on this timeline's native reserve model."""
+        if self.kind == "training" and self.source is not None:
+            return self.source.rs_bytes(mi)
+        if self.kind == "serving" and self.source is not None:
+            return self.source.rs_bytes()
+        return self.reserved_bytes
+
+    def peak_bytes(self) -> float:
+        """Peak concurrently-live object bytes over the timeline."""
+        if self.kind == "serving" and hasattr(self.source, "peak_kv_bytes"):
+            return self.source.peak_kv_bytes()   # same object set, one impl
+        deltas: Dict[int, float] = {}
+        for o in self.objects:
+            deltas[o.birth] = deltas.get(o.birth, 0.0) + o.bytes
+            deltas[o.death + 1] = deltas.get(o.death + 1, 0.0) - o.bytes
+        peak = cur = 0.0
+        for t in sorted(deltas):
+            cur += deltas[t]
+            peak = max(peak, cur)
+        return peak
+
+    def step_time_all_fast(self, s: int, hw: HWSpec) -> float:
+        """Roofline step time with every byte in the fast tier."""
+        return max(self.flops[s] / hw.peak_flops,
+                   self.total_bytes[s] / hw.fast_bw)
+
+    def extra_time(self, s: int, hw: HWSpec) -> float:
+        """Off-timeline add-on (prefill) at step s; always fast-tier."""
+        if not self.extra_flops[s] and not self.extra_fast_bytes[s]:
+            return 0.0
+        return max(self.extra_flops[s] / hw.peak_flops,
+                   self.extra_fast_bytes[s] / hw.fast_bw)
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """Anything the unified runtime can plan for."""
+    kind: str
+
+    def timeline(self) -> AccessTimeline: ...
+
+
+class TrainingWorkload:
+    """Adapter: profiler ``TraceProfile`` -> unified timeline.
+
+    Timeline steps are the profiler's layer steps of one training iteration
+    (forward periods, head/loss, backward periods, optimizer boundary).  The
+    placeable objects are the long-lived activations and accessed weights —
+    exactly the paper's migration candidates; short-lived objects stay in the
+    reserved pool (``reserved_bytes``) and their traffic rides in
+    ``fixed_fast_bytes``.
+    """
+
+    kind = "training"
+
+    def __init__(self, profile):
+        self.profile = profile
+        self._tl: Optional[AccessTimeline] = None
+
+    def timeline(self) -> AccessTimeline:
+        if self._tl is not None:
+            return self._tl
+        prof = self.profile
+        steps = prof.num_steps
+        objects: List[DataObject] = []
+        for o in prof.objects:
+            if not o.accesses or getattr(o, "fused", False):
+                continue
+            if o.kind == "activation" and o.lifetime < 2:
+                continue                      # reserve pool, never placed
+            objects.append(DataObject(o.uid, o.size, max(0, o.birth),
+                                      max(0, o.death),
+                                      sorted(set(o.accesses)), o.kind))
+        admits: Dict[int, List[Any]] = {}
+        births: Dict[int, List[Any]] = {}
+        frees: Dict[int, List[Any]] = {}
+        reads: Dict[int, List[Any]] = {}
+        obj_read_bytes = [0.0] * steps
+        for o in objects:
+            (admits if o.kind == "weight" else births).setdefault(
+                o.birth if o.kind != "weight" else 0, []).append(o)
+            frees.setdefault(o.death + 1, []).append(o)
+            for s in o.accesses:
+                if 0 <= s < steps:
+                    reads.setdefault(s, []).append(o)
+                    obj_read_bytes[s] += o.bytes
+        flops = [prof.step_flops(s) for s in range(steps)]
+        total = [prof.step_bytes(s) for s in range(steps)]
+        fixed = [max(0.0, total[s] - obj_read_bytes[s]) for s in range(steps)]
+        self._tl = AccessTimeline(
+            kind=self.kind, num_steps=steps, objects=objects, flops=flops,
+            total_bytes=total, fixed_fast_bytes=fixed, tokens=[0] * steps,
+            extra_flops=[0.0] * steps, extra_fast_bytes=[0.0] * steps,
+            admits=admits, births=births, frees=frees, reads=reads,
+            reserved_bytes=prof.rs_bytes(1), source=prof)
+        return self._tl
+
+
+class ServingWorkload:
+    """Adapter: ``hmsim.ServeTrace`` -> unified timeline.
+
+    Timeline steps are decode-token steps; the objects are the trace's KV
+    blocks (used directly — identity-preserving, so event order and therefore
+    simulated numbers are bit-identical to the pre-unification serve
+    simulator).  Prefill work at slot refills rides in the ``extra_*``
+    channels, KV writes + weight streaming in ``fixed_fast_bytes``.
+    """
+
+    kind = "serving"
+
+    def __init__(self, trace):
+        self.trace = trace
+        self._tl: Optional[AccessTimeline] = None
+
+    def timeline(self) -> AccessTimeline:
+        if self._tl is not None:
+            return self._tl
+        tr = self.trace
+        steps = tr.num_steps
+        flops, fixed, total = [], [], []
+        tokens, eflops, ebytes = [], [], []
+        for t in range(steps):
+            act = tr.active.get(t, 0)
+            flops.append(act * tr.flops_per_token)
+            fx = tr.write_bytes(t) + tr.weight_bytes
+            fixed.append(fx)
+            total.append(fx + sum(o.bytes for o in tr.reads.get(t, ())))
+            tokens.append(act)
+            p_tok = tr.prefill_tokens.get(t, 0)
+            eflops.append(p_tok * tr.flops_per_token)
+            ebytes.append(p_tok * tr.num_layers * tr.kv_token_bytes)
+        self._tl = AccessTimeline(
+            kind=self.kind, num_steps=steps, objects=tr.objects, flops=flops,
+            total_bytes=total, fixed_fast_bytes=fixed, tokens=tokens,
+            extra_flops=eflops, extra_fast_bytes=ebytes, admits=tr.admits,
+            births=tr.births, frees=tr.frees, reads=tr.reads,
+            reserved_bytes=0.0, source=tr)
+        return self._tl
+
+
+def as_workload(w: Any):
+    """Coerce a TraceProfile / ServeTrace / Workload into a Workload.
+
+    Dispatch is structural (no imports of the source modules): a training
+    profile exposes ``num_periods``, a serving trace ``num_slots``.
+    """
+    if isinstance(w, (TrainingWorkload, ServingWorkload)):
+        return w
+    if hasattr(w, "timeline") and hasattr(w, "kind"):
+        return w
+    if hasattr(w, "num_periods") and hasattr(w, "objects"):
+        return TrainingWorkload(w)
+    if hasattr(w, "num_slots") and hasattr(w, "kv_token_bytes"):
+        return ServingWorkload(w)
+    raise TypeError(f"cannot adapt {type(w).__name__} into a runtime "
+                    "Workload (expected TraceProfile, ServeTrace, or an "
+                    "object implementing the Workload protocol)")

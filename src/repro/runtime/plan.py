@@ -1,0 +1,388 @@
+"""The unified planner: ``runtime.plan(workload, hw, fast_bytes)`` for both
+training and serving, returning one serializable ``PlacementPlan``.
+
+Training (paper §4.4) — given one profiled training step:
+  1. compute RS(MI), Data(MI), T(MI) for every candidate interval,
+  2. prune by the paper's two constraints,
+       space (Eq. 1):  Data(MI) < S - RS(MI)
+       time  (Eq. 2):  T(MI)    > (S - RS(MI)) / BW
+  3. measure surviving candidates through the registered policy (the runtime
+     system would use one real training step per candidate — same procedure,
+     measured instead of simulated), resolving Case 3 by test-and-trial,
+  4. return the sweet spot.
+
+Serving — the same Eq. 1/2 restated per decode *token*: the reserve pool RS
+is the set of open (still-filling) KV blocks, the candidates are prefetch
+look-aheads, and the per-slot hot windows are sized from each slot's own
+decode schedule.
+
+The resulting ``PlacementPlan`` subsumes the legacy training ``Plan`` and
+serving ``ServePlan``: it drives the JAX offload engine
+(``core/offload.from_plan`` — ``mi`` is the layer-scan block size), the
+serving engine (``serve/engine.ContinuousBatcher`` — ``cold_len`` /
+``cold_len_slot`` / ``page_tokens``), and the benchmarks; ``to_json`` /
+``from_json`` round-trip it bit-identically for storage beside benchmark
+artifacts.  Where each paper equation lands in the code is mapped in
+``docs/RUNTIME_API.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.hardware import HWSpec
+from repro.runtime.objects import (MemoryTier, TrainingWorkload, as_workload,
+                                   tiers_from_hw)
+from repro.runtime.policies import PlacementResult, get_policy, simulate
+
+
+# ================================================================ candidates ==
+
+@dataclass
+class Candidate:
+    """A training migration-interval candidate."""
+    mi: int
+    rs: float
+    data: float          # max prefetch bytes over intervals
+    t: float             # min compute seconds over intervals
+    space_ok: bool
+    time_ok: bool
+    sim: Optional[PlacementResult] = None
+
+
+@dataclass
+class ServeCandidate:
+    """A serving look-ahead candidate."""
+    lookahead: int
+    hot_window: int          # tokens of KV kept fast per slot
+    prefetch_bytes: float    # per-step slow->fast demand at this look-ahead
+    t_token: float           # all-fast decode step time
+    space_ok: bool
+    time_ok: bool
+    sim: Optional[PlacementResult] = None
+
+
+# ====================================================================== plan ==
+
+@dataclass
+class PlacementPlan:
+    """The one tiering decision both runtimes consume.
+
+    ``kind`` selects which half is meaningful: training plans carry ``mi``
+    (migration interval in timeline steps) and the Case-3 resolution;
+    serving plans carry the hot window / look-ahead / per-slot windows.
+    ``slot_hot_windows`` refines the single global window per *slot*: each
+    slot's window is sized from its own decode schedule (the byte-seconds its
+    KV objects occupy in the trace), so a slot serving short requests never
+    pins the same hot budget as one serving long ones.  ``page_tokens`` is
+    the page granularity those per-slot boundaries are quantized to — the
+    unit the paged decode kernel and the PageTable move.
+    """
+    kind: str = "serving"            # "training" | "serving"
+    policy: str = "sentinel"
+    fast_bytes: float = 0.0
+    rs: float = 0.0
+    # ---- training half ----
+    mi: int = 0
+    stall_on_case3: bool = True
+    steps_used: int = 0              # "p, m & t" budget consumed (Table 3)
+    # ---- serving half ----
+    hot_window: int = 0
+    lookahead: int = 0
+    slot_hot_windows: Optional[List[int]] = None
+    page_tokens: int = 0
+    # ---- shared ----
+    tiers: Optional[List[MemoryTier]] = None
+    candidates: List[Any] = field(default_factory=list)
+    sim: Optional[PlacementResult] = None
+
+    # ------------------------------------------------------------ queries --
+    @property
+    def throughput(self) -> float:
+        return self.sim.throughput if self.sim else 0.0
+
+    @property
+    def decode_throughput(self) -> float:
+        return self.sim.decode_throughput if self.sim else 0.0
+
+    def cold_len(self, max_seq: int) -> int:
+        """Cold-prefix length for a ``max_seq``-token cache buffer (global
+        boundary — the concat path)."""
+        return max(0, max_seq - self.hot_window)
+
+    def slot_window(self, slot: int) -> int:
+        """Hot-window tokens for ``slot`` (falls back to the global window)."""
+        if not self.slot_hot_windows:
+            return self.hot_window
+        return self.slot_hot_windows[slot % len(self.slot_hot_windows)]
+
+    def cold_len_slot(self, slot: int, seq_len: int,
+                      page_tokens: Optional[int] = None) -> int:
+        """Cold boundary for ``slot`` at its *current* sequence length,
+        quantized down to page granularity: tokens older than the slot's own
+        hot window, in whole pages.  Monotone in ``seq_len``, so within one
+        residency a slot's boundary only ever advances.  ``page_tokens``
+        overrides the plan's page size (the engine adjusts it to divide its
+        cache buffer)."""
+        cold = max(0, seq_len - self.slot_window(slot))
+        page = max(1, page_tokens if page_tokens else self.page_tokens)
+        return (cold // page) * page
+
+    # --------------------------------------------------------------- json --
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for c, cd in zip(self.candidates, d["candidates"]):
+            cd["_type"] = "interval" if isinstance(c, Candidate) else "serve"
+        return d
+
+    def to_json(self) -> str:
+        """Deterministic serialization: same plan -> same bytes (the golden
+        round-trip contract ``from_json(p.to_json()).to_json() == p.to_json()``
+        guards against silent planner drift)."""
+        return json.dumps(self.to_dict(), sort_keys=True, indent=2)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlacementPlan":
+        d = dict(d)
+        cands = []
+        for cd in d.get("candidates") or []:
+            cd = dict(cd)
+            typ = cd.pop("_type", "serve")
+            cd["sim"] = _result_from_dict(cd.get("sim"))
+            cands.append((Candidate if typ == "interval"
+                          else ServeCandidate)(**cd))
+        d["candidates"] = cands
+        d["sim"] = _result_from_dict(d.get("sim"))
+        if d.get("tiers") is not None:
+            d["tiers"] = [MemoryTier(**t) for t in d["tiers"]]
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PlacementPlan":
+        return cls.from_dict(json.loads(s))
+
+
+def _result_from_dict(d: Optional[dict]) -> Optional[PlacementResult]:
+    if d is None:
+        return None
+    d = dict(d)
+    d["cases"] = {int(k): v for k, v in d.get("cases", {}).items()}
+    return PlacementResult(**d)
+
+
+# ========================================================== training planner ==
+
+def interval_stats(profile, mi: int, hw: HWSpec):
+    """(Data(MI), T(MI)) per interval: prefetch bytes needed by each interval
+    and compute time available in the preceding one."""
+    steps = profile.num_steps
+    acts = [o for o in profile.objects if o.accesses]
+    data_per: Dict[int, float] = {}
+    t_per: Dict[int, float] = {}
+    n_int = (steps + mi - 1) // mi
+    for i in range(n_int):
+        lo, hi = i * mi, min((i + 1) * mi, steps)
+        t_per[i] = sum(max(profile.step_flops(s) / hw.peak_flops,
+                           profile.step_bytes(s) / hw.fast_bw)
+                       for s in range(lo, hi))
+        data_per[i] = 0.0
+    # the final boundary step (embedding grad + optimizer) touches every
+    # weight/moment, but elementwise: it streams tile-by-tile and never needs
+    # them resident together (ZeRO-Offload-style), so it is exempt from the
+    # Eq. 1 capacity constraint (it still costs migration *time*).
+    opt_step = steps - 1
+    for o in acts:
+        if o.kind == "weight" or o.lifetime >= 2:
+            touched = sorted({a // mi for a in o.accesses if a != opt_step})
+            for i in touched:
+                # fetched for interval i (unless it was just produced there)
+                if o.kind == "weight" or o.birth // mi != i:
+                    data_per[i] += o.size
+    return data_per, t_per
+
+
+def enumerate_candidates(profile, hw: HWSpec, fast_bytes: float,
+                         max_mi: Optional[int] = None) -> List[Candidate]:
+    out = []
+    steps = profile.num_steps
+    max_mi = max_mi or max(1, steps // 2)
+    for mi in range(1, max_mi + 1):
+        rs = profile.rs_bytes(mi)
+        data_per, t_per = interval_stats(profile, mi, hw)
+        data = max(data_per.values()) if data_per else 0.0
+        t = min(t_per.values()) if t_per else 0.0
+        space_ok = data < fast_bytes - rs
+        time_ok = t > data / hw.mig_bw      # tight form of Eq. 2 (see note)
+        out.append(Candidate(mi, rs, data, t, space_ok, time_ok))
+    return out
+
+
+def plan_training(workload, hw: HWSpec, fast_bytes: float, *,
+                  policy: str = "sentinel_mi", max_mi: Optional[int] = None,
+                  sim_all: bool = False) -> PlacementPlan:
+    """Pick the optimal migration interval.
+
+    Note on Eq. 2: the paper states T(MI) > (S - RS)/BW — the worst case of a
+    full fast-memory refill.  We prune with the tighter per-interval form
+    T(MI) > Data(MI)/BW (a superset of the paper's surviving candidates) and
+    let the measured sweep decide, exactly as the paper's runtime does.
+    """
+    wl = as_workload(workload)
+    profile = getattr(wl, "profile", None)
+    if profile is None:                      # protocol workloads / timelines
+        profile = wl.timeline().source
+    if profile is None or not hasattr(profile, "num_periods"):
+        raise TypeError("plan_training needs a workload whose timeline "
+                        "sources a TraceProfile (candidate enumeration reads "
+                        "the profiled objects)")
+    pol = get_policy(policy)
+    cands = enumerate_candidates(profile, hw, fast_bytes, max_mi)
+    survivors = [c for c in cands if c.space_ok and c.time_ok]
+    if not survivors:                        # fall back: least-bad candidates
+        survivors = [c for c in cands if c.space_ok] or cands
+    steps_used = 1                           # the profiling step
+    best: Optional[Candidate] = None
+    pool = survivors if not sim_all else cands
+    for c in pool:
+        c.sim = pol.simulate(wl, hw, fast_bytes, mi=c.mi)
+        steps_used += 1 + c.sim.detail.get("tt_steps_used", 0)
+        if best is None or c.sim.time < best.sim.time:
+            best = c
+    stall = best.sim.detail.get("tt_choice", "stall") != "slow-access"
+    return PlacementPlan(
+        kind="training", policy=policy, fast_bytes=fast_bytes,
+        rs=best.sim.detail.get("rs", 0.0), mi=best.mi, stall_on_case3=stall,
+        steps_used=steps_used, tiers=tiers_from_hw(hw, fast_bytes),
+        candidates=cands, sim=best.sim)
+
+
+def mi_to_periods(profile, mi: int) -> int:
+    """Convert a timeline-step MI to layer-scan block size (periods per block)
+    for the offload engine.  Timeline steps map 1:1 to periods inside the
+    forward/backward regions."""
+    return max(1, min(mi, profile.num_periods))
+
+
+# =========================================================== serving planner ==
+# Decode-phase planning: the paper's Eq. 1/2 restated per *token* instead of
+# per migration interval.  During decode the timeline unit is one token step,
+# the reserve pool RS is the set of open (still-filling) KV blocks, and the
+# prefetchable data per step is bounded by one token's compute time times the
+# migration bandwidth:
+#
+#   space (Eq. 1 per-token):  hot_bytes = B * W * kv_tok < S - RS_serve
+#   time  (Eq. 2 per-token):  t_token   > prefetch_bytes(L) / BW_mig
+#
+# where W is the per-slot hot window (tokens kept in fast memory) and L the
+# look-ahead (token steps of prefetch lead).  Like the training planner, the
+# candidates surviving both constraints are measured on the simulator and the
+# sweet spot wins.
+
+
+def slot_kv_weights(trace) -> List[float]:
+    """Per-slot share of KV byte-seconds over the timeline: how much cache
+    each slot's decode schedule actually keeps alive.  The per-slot analogue
+    of the paper's per-object lifetime profile."""
+    w = [0.0] * max(1, trace.num_slots)
+    for o in trace.objects:
+        w[o.slot % len(w)] += o.bytes * (o.death - o.birth + 1)
+    total = sum(w) or 1.0
+    return [x / total for x in w]
+
+
+def serve_token_stats(trace, hw: HWSpec) -> tuple:
+    """(t_token, read_bytes): all-fast decode-step time and mean per-step KV
+    read volume over the timeline — the serving analogue of interval_stats."""
+    steps = max(1, trace.num_steps)
+    read_bytes = sum(o.bytes * len(o.accesses) for o in trace.objects) / steps
+    act = sum(trace.active.get(t, 0) for t in range(steps)) / steps
+    flops = act * trace.flops_per_token
+    bw_bytes = read_bytes + trace.weight_bytes + act * trace.num_layers \
+        * trace.kv_token_bytes
+    return max(flops / hw.peak_flops, bw_bytes / hw.fast_bw), read_bytes
+
+
+def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
+                 policy: str = "sentinel",
+                 lookaheads: Sequence[int] = (2, 4, 8, 16, 32)
+                 ) -> PlacementPlan:
+    """Pick the hot window and prefetch look-ahead for serving-time tiering."""
+    wl = as_workload(workload)
+    trace = getattr(wl, "trace", None)
+    if trace is None:                        # protocol workloads / timelines
+        trace = wl.timeline().source
+    if trace is None or not hasattr(trace, "num_slots"):
+        raise TypeError("plan_serving needs a workload whose timeline "
+                        "sources a ServeTrace (window sizing reads the slot "
+                        "geometry)")
+    rs = trace.rs_bytes()
+    budget = max(0.0, fast_bytes - rs)
+    kv_tok_all = trace.num_layers * trace.kv_token_bytes
+    slots = max(1, trace.num_slots)
+    # floor: the open, still-filling block per slot is fast by construction
+    # (it IS the reserve pool), so the hot window is never below one block
+    hot_window = max(trace.block_tokens,
+                     int(budget / (slots * kv_tok_all))) if kv_tok_all else 0
+    t_token, _ = serve_token_stats(trace, hw)
+    cold_bytes = max(0.0, trace.peak_kv_bytes() - budget)
+    # Eq. 1 per-token: the hot windows plus the reserve pool must fit (the
+    # floor above can violate this when fast memory is tiny)
+    space_ok = rs + slots * hot_window * kv_tok_all <= fast_bytes
+
+    cands: List[ServeCandidate] = []
+    for la in sorted(set(lookaheads)):
+        # history blocks re-read every history_period steps: within a
+        # look-ahead of L steps, L/period of the cold set must be prefetched,
+        # against L steps' worth of migration bandwidth (Eq. 2 per-token)
+        prefetch = cold_bytes * min(1.0, la / max(1, trace.history_period))
+        cands.append(ServeCandidate(la, hot_window, prefetch, t_token,
+                                    space_ok=space_ok,
+                                    time_ok=t_token * la * hw.mig_bw
+                                    >= prefetch))
+    # measure survivors on the simulator (fall back to everything when the
+    # constraints kill all candidates, mirroring the training planner)
+    pool = [c for c in cands if c.space_ok and c.time_ok] or cands
+    best: Optional[ServeCandidate] = None
+    for c in pool:
+        c.sim = simulate(wl, hw, fast_bytes, policy, lookahead=c.lookahead)
+        if best is None or c.sim.decode_throughput > best.sim.decode_throughput:
+            best = c
+
+    # Eq. 1 refined per slot: distribute the hot-token budget in proportion
+    # to each slot's own decode schedule (KV byte-seconds), floor one block
+    # (its open block is the reserve pool), quantized to block==page units.
+    blk = max(1, trace.block_tokens)
+    budget_tokens = budget / kv_tok_all if kv_tok_all else 0.0
+    weights = slot_kv_weights(trace)
+    slot_windows = [max(blk, (int(budget_tokens * w) // blk) * blk)
+                    for w in weights]
+
+    return PlacementPlan(
+        kind="serving", policy=policy, fast_bytes=fast_bytes, rs=rs,
+        hot_window=best.hot_window, lookahead=best.lookahead,
+        slot_hot_windows=slot_windows, page_tokens=blk,
+        tiers=tiers_from_hw(hw, fast_bytes), candidates=cands, sim=best.sim)
+
+
+# ================================================================ entrypoint ==
+
+def plan(workload, hw: HWSpec, fast_bytes: float, *,
+         policy: Optional[str] = None, max_mi: Optional[int] = None,
+         sim_all: bool = False,
+         lookaheads: Sequence[int] = (2, 4, 8, 16, 32)) -> PlacementPlan:
+    """THE entry point: profile -> plan for any workload.
+
+    ``workload`` is a training ``TraceProfile``, a serving ``ServeTrace``, or
+    a ``Workload`` adapter.  ``policy`` names a registered placement policy
+    (default: ``sentinel_mi`` for training, ``sentinel`` for serving); the
+    remaining knobs apply to the matching planner half only.
+    """
+    wl = as_workload(workload)
+    if wl.kind == "training":
+        return plan_training(wl, hw, fast_bytes,
+                             policy=policy or "sentinel_mi",
+                             max_mi=max_mi, sim_all=sim_all)
+    return plan_serving(wl, hw, fast_bytes, policy=policy or "sentinel",
+                        lookaheads=lookaheads)

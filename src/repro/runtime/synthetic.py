@@ -1,0 +1,86 @@
+"""Deterministic synthetic workloads for both planner halves.
+
+No RNG, no jax tracing: the same arguments always resolve to byte-identical
+traces, which is what the golden-plan JSON tests and the unified benchmark
+smoke (benchmarks/bench_runtime.py) depend on.
+
+``synthetic_profile`` hand-builds a training ``TraceProfile`` with the
+paper's object population (a majority of short-lived activations in the
+reserve pool, long-lived residuals bridging forward->backward, weights read
+in both passes and streamed by the optimizer).  ``synthetic_serve_trace``
+resolves a deterministic request stream through the real serve-trace builder.
+"""
+from __future__ import annotations
+
+from repro.core.profiler import (DataObject, LayerStats, TraceProfile,
+                                 timeline_steps)
+
+
+def synthetic_profile(num_periods: int = 4, unit: int = 1 << 20,
+                      res_per_period: int = 3) -> TraceProfile:
+    """A training profile with the paper's §3 object structure.
+
+    Per forward period: ``res_per_period`` long-lived residuals (born in the
+    forward step, re-read in the matching backward step — the migration
+    candidates), a pile of short-lived temporaries (the reserve pool), and a
+    weight block read in forward + backward and streamed at the optimizer
+    boundary.  ``unit`` scales every byte count.
+    """
+    P = num_periods
+    steps = timeline_steps(P)                 # 2P + 3
+    prof = TraceProfile(num_periods=P, num_steps=steps)
+    uid = 0
+
+    def add(size, birth, death, kind, accesses):
+        nonlocal uid
+        o = DataObject(uid, int(size), birth, death, len(accesses), kind,
+                       accesses=sorted(accesses))
+        prof.objects.append(o)
+        uid += 1
+        return o
+
+    opt = steps - 1
+    for p in range(P):
+        fwd, bwd = p + 1, 2 * P + 1 - p
+        # weights: read in forward and backward, streamed by the optimizer
+        add(4 * unit, 0, opt, "weight", [fwd, bwd, opt])
+        # long-lived residuals: forward -> backward reuse (offload targets)
+        for r in range(res_per_period):
+            add(2 * unit, fwd, bwd, "activation", [fwd, bwd])
+        # short-lived temporaries: born and consumed within the step
+        for r in range(6):
+            add(unit, fwd, fwd, "activation", [fwd])
+            add(unit, bwd, bwd, "activation", [bwd])
+    # head/loss boundary activation
+    add(unit, P + 1, P + 1, "activation", [P + 1])
+
+    for s in range(steps):
+        touched = sum(o.size for o in prof.objects if s in o.accesses)
+        flops = 40.0 * touched                # mildly compute-bound roofline
+        prof.layers[s] = LayerStats(s, flops=flops,
+                                    bytes_accessed=float(touched) + unit)
+        prof.total_flops += flops
+    for o in prof.objects:
+        if o.kind != "activation":
+            continue
+        ls = prof.layers[max(o.birth, 0)]
+        if o.lifetime <= 1:
+            ls.produced_short += o.size
+        else:
+            ls.produced_long += o.size
+            prof.layers[max(o.death, 0)].reads_long += o.size
+    return prof
+
+
+def synthetic_serve_trace(num_requests: int = 12, num_slots: int = 4,
+                          num_layers: int = 8, kv_token_bytes: float = 4096,
+                          weight_bytes: float = 50e6,
+                          flops_per_token: float = 2e9):
+    """The serving fixture trace: a deterministic mixed request stream
+    resolved into per-slot per-layer KV-block objects."""
+    from repro.core.hmsim import build_serve_trace, synthetic_requests
+    reqs = synthetic_requests(num_requests)
+    return build_serve_trace(reqs, num_slots=num_slots, num_layers=num_layers,
+                             kv_token_bytes=kv_token_bytes,
+                             weight_bytes=weight_bytes,
+                             flops_per_token=flops_per_token)

@@ -169,8 +169,26 @@ class ContinuousBatcher:
         self._admit()
         if not any(self.active):
             return False
+        paged_view = None
         if self.paged is not None:
             caches = self.paged.merged()
+            if self.cfg.use_paged_decode:
+                # hand attention the engine's page layout so decode reads KV
+                # through ops.paged_decode_attention (hot/cold pools + page
+                # table) instead of the dense masked-merge view; boundaries
+                # are concrete ints (pool packing happens at trace time) and
+                # the layer-independent layout is built once per step here,
+                # so each attention layer only gathers its own pools
+                from repro.kernels.paged_decode import pool_layout
+                boundaries = [int(b) for b in
+                              jnp.asarray(self.paged.boundaries)]
+                paged_view = {
+                    "boundaries": boundaries,
+                    "page_tokens": self.page_tokens,
+                    "layout": pool_layout(boundaries,
+                                          self.max_seq // self.page_tokens,
+                                          self.page_tokens),
+                }
         elif self.tiered is not None:
             caches = self.tiered.merged()
         else:
@@ -178,7 +196,7 @@ class ContinuousBatcher:
         logits, new_caches, _ = model.forward(
             self.params, self.cfg, {"tokens": self.last_tok[:, None]},
             caches=caches, cache_index=self.lengths,
-            decode=True)
+            decode=True, paged_view=paged_view)
         if self.paged is not None:
             self.paged.hot = new_caches
             # advance each active slot's own boundary: when the new length

@@ -1,0 +1,210 @@
+"""The unified runtime API: one profile -> plan -> migrate surface for both
+workload families.  Pins (a) the golden-plan JSON round trip, (b) the
+cross-workload policy matrix (every registered policy runs on every
+workload, and the lifetime-aware policy never loses to the page-grain
+baseline at the paper's headline fraction), and (c) the deprecation shims
+(old entry points warn but return results equal to the new API's)."""
+import warnings
+
+import pytest
+
+from repro import runtime
+from repro.core.hardware import PAPER_HM, TPU_V5E
+from repro.runtime.synthetic import synthetic_profile, synthetic_serve_trace
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return synthetic_profile()
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synthetic_serve_trace()
+
+
+# ------------------------------------------------------------- workloads ----
+
+def test_workload_adapters_dispatch(prof, trace):
+    wt = runtime.as_workload(prof)
+    ws = runtime.as_workload(trace)
+    assert (wt.kind, ws.kind) == ("training", "serving")
+    tl_t, tl_s = wt.timeline(), ws.timeline()
+    assert tl_t.num_steps == prof.num_steps
+    assert tl_s.num_steps == trace.num_steps
+    # serving timeline preserves the trace's objects and event identity
+    assert tl_s.objects is trace.objects
+    assert tl_s.reads is trace.reads
+    # training timeline: only migration candidates are objects; the
+    # short-lived pool is carried as reserved bytes
+    assert all(o.kind == "weight" or o.lifetime >= 2 for o in tl_t.objects)
+    assert tl_t.reserved_bytes == prof.rs_bytes(1)
+    assert tl_t.peak_bytes() > 0 and tl_s.peak_bytes() > 0
+    with pytest.raises(TypeError, match="cannot adapt"):
+        runtime.as_workload(object())
+
+
+def test_plan_accepts_protocol_workloads(prof, trace):
+    """runtime.plan works for anything implementing the Workload protocol —
+    including a bare AccessTimeline — not just the two concrete adapters."""
+    tl_t = runtime.as_workload(prof).timeline()
+    tl_s = runtime.as_workload(trace).timeline()
+    assert runtime.plan(tl_t, PAPER_HM, 0.3 * prof.peak_bytes()) == \
+        runtime.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+    assert runtime.plan(tl_s, TPU_V5E, 0.2 * trace.peak_kv_bytes()) == \
+        runtime.plan(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+
+
+def test_memory_tiers(prof):
+    pl = runtime.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+    assert pl.tiers is not None and [t.name for t in pl.tiers] == \
+        ["fast", "slow"]
+    assert pl.tiers[0].capacity == pytest.approx(0.3 * prof.peak_bytes())
+    assert pl.tiers[1].capacity is None      # slow tier is unbounded
+
+
+# ---------------------------------------------------------- golden plans ----
+
+def test_plan_json_roundtrip_serving_golden(trace):
+    """Plan on a fixed synthetic workload, round-trip, byte-identical
+    re-serialization (guards against silent planner drift)."""
+    pl = runtime.plan(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    s = pl.to_json()
+    back = runtime.PlacementPlan.from_json(s)
+    assert back.to_json() == s                       # byte-identical
+    # and the reconstructed plan is semantically the original
+    assert back == pl
+    assert back.cold_len_slot(1, 100) == pl.cold_len_slot(1, 100)
+    assert back.sim.decode_throughput == pl.decode_throughput
+
+
+def test_plan_json_roundtrip_training_golden(prof):
+    pl = runtime.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+    s = pl.to_json()
+    back = runtime.PlacementPlan.from_json(s)
+    assert back.to_json() == s
+    assert back == pl
+    assert (back.kind, back.mi, back.stall_on_case3) == \
+        ("training", pl.mi, pl.stall_on_case3)
+    # candidate types survive the trip (tagged, not inferred)
+    assert all(isinstance(c, runtime.Candidate) for c in back.candidates)
+
+
+def test_plan_feeds_offload_engine(prof):
+    """The unified plan drives the training offload config end to end."""
+    from repro.core import offload
+    pl = runtime.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+    scfg = offload.from_plan(prof, pl)
+    assert scfg.mode == "offload"
+    assert 1 <= scfg.mi_periods <= prof.num_periods
+    assert prof.num_periods % scfg.mi_periods == 0
+
+
+# ---------------------------------------------------------- policy matrix ----
+
+def test_policy_matrix_cross_workload(prof, trace):
+    """Every registered policy runs on both a training TraceProfile workload
+    and a ServeTrace workload without error; ``sentinel`` never loses to
+    ``lru_page`` on either at 20% fast memory."""
+    fast_t = 0.2 * prof.peak_bytes()
+    fast_s = 0.2 * trace.peak_kv_bytes()
+    res_t, res_s = {}, {}
+    for name in runtime.list_policies():
+        if name == "base":
+            continue
+        res_t[name] = runtime.simulate(prof, PAPER_HM, fast_t, name)
+        res_s[name] = runtime.simulate(trace, TPU_V5E, fast_s, name)
+        for r, tokens in ((res_t[name], 0), (res_s[name], sum(
+                trace.active.values()))):
+            assert r.policy == name
+            assert r.time > 0 and r.compute_time > 0
+            assert r.tokens == tokens
+    assert {"prefer_fast", "lru_page", "sentinel", "sentinel_mi", "ial",
+            "lru", "all_fast", "all_slow"} <= set(res_t)
+    # the paper's claim on both workloads: lifetime knowledge >= reactive
+    # page-grain, when fast memory is scarce
+    assert res_t["sentinel"].time <= res_t["lru_page"].time
+    assert res_s["sentinel"].time <= res_s["lru_page"].time
+    assert res_s["sentinel"].decode_throughput >= \
+        res_s["lru_page"].decode_throughput
+    # static bounds bracket every policy on both workloads
+    for res in (res_t, res_s):
+        for name, r in res.items():
+            assert r.time >= res["all_fast"].time * 0.999
+            assert r.time <= res["all_slow"].time * 1.001
+
+
+def test_training_native_policy_on_serving_and_vice_versa(prof, trace):
+    """The headline unification: the MI-interval engine plans serving traces
+    and the decode-native lifetime policy runs training profiles."""
+    r_mi = runtime.simulate(trace, TPU_V5E, 0.3 * trace.peak_kv_bytes(),
+                            "sentinel_mi", mi=8)
+    assert r_mi.mi == 8 and r_mi.tokens > 0
+    r_ev = runtime.simulate(prof, PAPER_HM, 0.3 * prof.peak_bytes(),
+                            "sentinel", lookahead=4)
+    assert r_ev.detail["lookahead"] == 4 and r_ev.time > 0
+
+
+# ------------------------------------------------------ deprecation shims ----
+
+def test_deprecated_plan_warns_and_matches(prof):
+    from repro.core import planner
+    with pytest.warns(DeprecationWarning, match="core.planner.plan"):
+        old = planner.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+    new = runtime.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+    assert isinstance(old, runtime.PlacementPlan)
+    assert old == new
+
+
+def test_deprecated_plan_serve_warns_and_matches(trace):
+    from repro.core import planner
+    with pytest.warns(DeprecationWarning, match="plan_serve"):
+        old = planner.plan_serve(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    new = runtime.plan(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    assert old == new
+
+
+def test_deprecated_simulators_warn_and_match(prof, trace):
+    from repro.core import hmsim
+    fast = 0.3 * prof.peak_bytes()
+    with pytest.warns(DeprecationWarning, match="simulate_sentinel"):
+        old = hmsim.simulate_sentinel(prof, PAPER_HM, fast, mi=2)
+    new = runtime.simulate(prof, PAPER_HM, fast, "sentinel_mi", mi=2,
+                           test_and_trial=False)
+    assert old == new
+    with pytest.warns(DeprecationWarning, match="simulate_sentinel_tt"):
+        old_tt = hmsim.simulate_sentinel_tt(prof, PAPER_HM, fast, 2)
+    assert old_tt == runtime.simulate(prof, PAPER_HM, fast, "sentinel_mi",
+                                      mi=2)
+    fast_s = 0.2 * trace.peak_kv_bytes()
+    with pytest.warns(DeprecationWarning, match="simulate_serve"):
+        old_s = hmsim.simulate_serve(trace, TPU_V5E, fast_s, "sentinel")
+    assert old_s == runtime.simulate(trace, TPU_V5E, fast_s, "sentinel")
+    with pytest.warns(DeprecationWarning, match="simulate_caching"):
+        old_c = hmsim.simulate_caching(prof, PAPER_HM, fast, "ial")
+    assert old_c == runtime.simulate(prof, PAPER_HM, fast, "ial")
+    with pytest.warns(DeprecationWarning, match="simulate_static"):
+        old_f = hmsim.simulate_static(prof, PAPER_HM, "fast")
+    assert old_f.time == runtime.simulate(prof, PAPER_HM, 0.0,
+                                          "all_fast").time
+
+
+def test_legacy_registry_is_the_unified_registry():
+    """core.policies and runtime.policies share one registry object, and the
+    legacy KeyError message survives."""
+    from repro.core import policies as legacy
+    assert legacy.POLICIES is runtime.POLICIES
+    assert issubclass(legacy.get_policy("sentinel_mi"), legacy.ServePolicy)
+    with pytest.raises(KeyError, match="unknown serve policy"):
+        legacy.get_policy("nope")
+    with pytest.raises(KeyError, match="unknown placement policy"):
+        runtime.get_policy("nope")
+
+
+def test_new_api_does_not_warn(prof, trace):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        runtime.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+        runtime.plan(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+        runtime.simulate(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes(),
+                         "sentinel")
