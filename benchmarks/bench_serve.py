@@ -13,17 +13,22 @@ policy runs on every workload.
     PYTHONPATH=src python -m benchmarks.bench_serve
     PYTHONPATH=src python -m benchmarks.bench_serve \
         --arch smollm-360m --fracs 0.1,0.2 --slots 4 --policies sentinel,lru_page
-    PYTHONPATH=src python -m benchmarks.bench_serve --paged --json BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.bench_serve \
+        --paged --shared-prefix --json BENCH_serve.json
 
 Exits non-zero if the Sentinel object policy loses to the best page-grain
 baseline at the paper's headline 20% fast-memory fraction — the CI smoke
 gate.  ``--paged`` additionally runs the real ContinuousBatcher in the
-tiered layouts (global-boundary concat, per-slot paged, and per-slot paged
-with ``use_paged_decode`` — attention reading the page pools through
-``ops.paged_decode_attention``) on a reduced model and gates on the paged
-paths (a) reproducing the all-HBM tokens and (b) re-hosting strictly fewer
-simulated migration bytes than the concat path.  ``--json`` publishes every
-row (and the gate verdicts) for trend tracking across PRs.
+tiered layouts (global-boundary concat, per-slot paged, and the persistent
+page pools with ``use_paged_decode`` — attention writing into and reading
+from the physical pools through ``ops.paged_decode_attention``) on a
+reduced model and gates on the paged paths (a) reproducing the all-HBM
+tokens and (b) re-hosting strictly fewer simulated migration bytes than the
+concat path.  ``--shared-prefix`` runs the N-tenants x one-system-prompt
+workload shared vs unshared — simulator sweep plus the pool engine with
+``prefix_key`` sharing — and gates shared migration bytes AND peak pool
+bytes strictly below the unshared run at 20% fast memory.  ``--json``
+publishes every row (and the gate verdicts) for trend tracking across PRs.
 """
 from __future__ import annotations
 
@@ -82,6 +87,92 @@ def run(arch: str = ARCH, fracs=FRACS, slots_list=SLOTS, policies=None):
                     verdicts.append((hw_name, slots,
                                      best["sentinel"].decode_throughput, page))
     return rows, verdicts
+
+
+def run_shared_prefix(fracs=FRACS):
+    """Prefix-sharing sweep on the unified surface: the N-tenants x one
+    system prompt workload, shared (KV blocks of the common prefix are one
+    physical allocation) vs the byte-identical unshared stream, under the
+    ``sentinel`` policy.  Returns rows and the 20% gate inputs
+    (shared/unshared migration bytes and physical peaks)."""
+    from repro.runtime.synthetic import synthetic_shared_prefix_trace
+    ts = synthetic_shared_prefix_trace(shared=True)
+    tu = synthetic_shared_prefix_trace(shared=False)
+    peak_s, peak_u = ts.peak_kv_bytes(), tu.peak_kv_bytes()
+    rows = [("bench_serve_shared", "fast_frac", "mode", "tok_per_s",
+             "migration_mb", "peak_mb")]
+    gate = None
+    for frac in fracs:
+        fast = frac * peak_u                   # matched budget for both
+        rs = runtime.simulate(ts, TPU_V5E, fast, "sentinel")
+        ru = runtime.simulate(tu, TPU_V5E, fast, "sentinel")
+        for mode, r, peak in (("shared", rs, peak_s), ("unshared", ru, peak_u)):
+            rows.append(("bench_serve_shared", frac, mode,
+                         round(r.decode_throughput, 1),
+                         round((r.bytes_s2f + r.bytes_f2s) / 1e6, 4),
+                         round(peak / 1e6, 4)))
+        if abs(frac - 0.2) < 1e-9:
+            gate = (rs.bytes_s2f + rs.bytes_f2s,
+                    ru.bytes_s2f + ru.bytes_f2s, peak_s, peak_u)
+    return rows, gate
+
+
+def run_shared_prefix_engine(arch: str = ARCH):
+    """Real-engine prefix sharing: the persistent-pool batcher decoding two
+    tenants off one system prompt, with and without ``prefix_key`` sharing.
+    Gates on (a) tokens identical to the all-HBM reference in both runs and
+    (b) shared migration bytes AND peak pool bytes strictly below
+    unshared."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import model
+    from repro.models.layers import split_params
+    from repro.serve import engine
+
+    cfg = get_config(arch).reduced()
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    cfg_k = dataclasses.replace(cfg, use_paged_decode=True)
+    max_seq, slots = 32, 2
+    sys_p = jax.random.randint(jax.random.PRNGKey(7), (9,), 0,
+                               cfg.vocab_size).astype(jnp.int32)
+    reqs = []
+    for i in range(4):
+        user = jax.random.randint(jax.random.PRNGKey(11 + i), (2 + i,), 0,
+                                  cfg.vocab_size).astype(jnp.int32)
+        reqs.append((jnp.concatenate([sys_p, user]), 5 + i % 2))
+    trace = serve_trace_for(get_config(arch),
+                            [(int(t.shape[0]), d, 0) for t, d in reqs],
+                            slots=slots, layer_group=8,
+                            shared_prefix_tokens=int(sys_p.shape[0]))
+    plan = runtime.plan(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    plan = dataclasses.replace(plan, hot_window=max_seq // 2,
+                               slot_hot_windows=[4, 8], page_tokens=4)
+
+    def drive(c, p, paged, shared):
+        b = engine.ContinuousBatcher(params, c, slots, max_seq, plan=p,
+                                     paged=paged)
+        for t, d in reqs:
+            b.submit(t, d, prefix_key="sys" if shared else None)
+        out = b.run()
+        if b.pool is None:
+            return out, 0.0, 0.0
+        page_bytes = b.page_tokens * b._row_bytes
+        return out, b.sim_migration_bytes, b.pool.peak_pages * page_bytes
+
+    base, _, _ = drive(cfg, None, False, False)
+    out_s, mig_s, peak_s = drive(cfg_k, plan, True, True)
+    out_u, mig_u, peak_u = drive(cfg_k, plan, True, False)
+    match = base == out_s == out_u
+    rows = [("bench_serve_shared_engine", "mode", "migration_kb", "peak_kb",
+             "tokens_match"),
+            ("bench_serve_shared_engine", "shared", round(mig_s / 1e3, 3),
+             round(peak_s / 1e3, 3), match),
+            ("bench_serve_shared_engine", "unshared", round(mig_u / 1e3, 3),
+             round(peak_u / 1e3, 3), match)]
+    return rows, (match, mig_s, mig_u, peak_s, peak_u)
 
 
 def run_paged_smoke(arch: str = ARCH):
@@ -148,6 +239,10 @@ def main(argv=None):
                          f"{runtime.list_policies()}")
     ap.add_argument("--paged", action="store_true",
                     help="also run the paged-vs-concat engine smoke + gate")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="also run the prefix-sharing sweep (simulator + "
+                         "persistent-pool engine) and gate shared strictly "
+                         "below unshared at 20%% fast memory")
     ap.add_argument("--json", default="",
                     help="write rows + verdicts to this JSON file")
     args = ap.parse_args(argv)
@@ -195,9 +290,52 @@ def main(argv=None):
               f"paged_mb={bytes_p / 1e6:.4f},concat_mb={bytes_c / 1e6:.4f},"
               f"{'OK' if paged_ok else 'FAIL'}")
 
+    shared_rows = []
+    if args.shared_prefix:
+        srows, gate = run_shared_prefix(fracs)
+        shared_rows += srows
+        for r in srows:
+            print(",".join(map(str, r)))
+        if gate is None:
+            checks.append({"check": "shared_prefix@20%", "status": "SKIPPED",
+                           "reason": "requires --fracs containing 0.2"})
+            print("check,shared_prefix@20%,SKIPPED (needs frac 0.2)")
+        else:
+            mig_s, mig_u, peak_s, peak_u = gate
+            s_ok = mig_s < mig_u and peak_s < peak_u
+            ok &= s_ok
+            checks.append({"check": "shared_prefix@20%",
+                           "migration_shared_mb": round(mig_s / 1e6, 4),
+                           "migration_unshared_mb": round(mig_u / 1e6, 4),
+                           "peak_shared_mb": round(peak_s / 1e6, 4),
+                           "peak_unshared_mb": round(peak_u / 1e6, 4),
+                           "status": "OK" if s_ok else "FAIL"})
+            print(f"check,shared_prefix@20%,mig={mig_s / 1e6:.4f}/"
+                  f"{mig_u / 1e6:.4f}MB,peak={peak_s / 1e6:.4f}/"
+                  f"{peak_u / 1e6:.4f}MB,{'OK' if s_ok else 'FAIL'}")
+        erows, (match, mig_s, mig_u, peak_s, peak_u) = \
+            run_shared_prefix_engine(args.arch)
+        shared_rows += erows
+        for r in erows:
+            print(",".join(map(str, r)))
+        e_ok = match and mig_s < mig_u and peak_s < peak_u
+        ok &= e_ok
+        checks.append({"check": "shared_prefix_engine",
+                       "tokens_match": match,
+                       "migration_shared_kb": round(mig_s / 1e3, 3),
+                       "migration_unshared_kb": round(mig_u / 1e3, 3),
+                       "peak_shared_kb": round(peak_s / 1e3, 3),
+                       "peak_unshared_kb": round(peak_u / 1e3, 3),
+                       "status": "OK" if e_ok else "FAIL"})
+        print(f"check,shared_engine,match={match},"
+              f"mig={mig_s / 1e3:.3f}/{mig_u / 1e3:.3f}kB,"
+              f"peak={peak_s / 1e3:.3f}/{peak_u / 1e3:.3f}kB,"
+              f"{'OK' if e_ok else 'FAIL'}")
+
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"rows": [list(r) for r in rows + paged_rows],
+            json.dump({"rows": [list(r) for r in
+                                rows + paged_rows + shared_rows],
                        "checks": checks}, f, indent=2)
         print(f"wrote {args.json}")
 

@@ -32,6 +32,7 @@ from repro.core import warn_deprecated
 from repro.core.hardware import HWSpec
 from repro.core.profiler import TraceProfile
 # legacy re-exports: the unit model and result type live in the runtime now
+from repro.runtime.objects import peak_object_bytes
 from repro.runtime.policies import (PlacementResult, Unit,  # noqa: F401
                                     build_units)
 
@@ -116,7 +117,14 @@ def simulate_static(profile: TraceProfile, hw: HWSpec,
 
 @dataclass
 class KVObject:
-    """One per-slot, per-layer KV block (``block_tokens`` tokens of K+V)."""
+    """One per-slot, per-layer KV block (``block_tokens`` tokens of K+V).
+
+    ``shared_key`` tags blocks that are the *same physical data* across
+    requests (a common prompt prefix — one system prompt serving N tenants):
+    blocks with equal keys occupy the same physical pages at runtime, so
+    sharing-aware policies and the capacity/migration accounting count their
+    bytes exactly once (the trace-level mirror of kvcache.PageTable
+    refcounts)."""
     uid: int
     slot: int
     req: int
@@ -129,6 +137,7 @@ class KVObject:
     token_end: int
     prefill: bool              # born during prefill (vs appended during decode)
     accesses: List[int] = field(default_factory=list)  # sorted decode steps
+    shared_key: Optional[tuple] = None   # (prefix_id, layer, block) or None
 
 
 @dataclass
@@ -162,15 +171,11 @@ class ServeTrace:
         return self.active.get(t, 0) * self.num_layers * self.kv_token_bytes
 
     def peak_kv_bytes(self) -> float:
-        deltas: Dict[int, float] = collections.defaultdict(float)
-        for o in self.objects:
-            deltas[o.birth] += o.bytes
-            deltas[o.death + 1] -= o.bytes
-        peak = cur = 0.0
-        for t in sorted(deltas):
-            cur += deltas[t]
-            peak = max(peak, cur)
-        return peak
+        """Peak concurrently-live KV bytes — sharing-aware: blocks with the
+        same ``shared_key`` are one physical allocation, so a shared group
+        contributes its bytes once over the union of its members' lifetimes
+        (exactly when at least one reference holds the pages live)."""
+        return peak_object_bytes(self.objects)
 
 
 def synthetic_requests(n: int, prompt_tokens: int = 96, decode_tokens: int = 48,
@@ -188,15 +193,25 @@ def build_serve_trace(requests: Sequence[tuple], num_slots: int,
                       num_layers: int, kv_token_bytes: float, *,
                       block_tokens: int = 16, recent_window: int = 32,
                       history_period: int = 4, flops_per_token: float = 1e9,
-                      weight_bytes: float = 0.0) -> ServeTrace:
+                      weight_bytes: float = 0.0,
+                      shared_prefix_tokens: int = 0) -> ServeTrace:
     """Resolve a request stream ``[(prompt_tokens, decode_tokens), ...]`` into
-    a slot-scheduled decode timeline with per-block KV objects."""
+    a slot-scheduled decode timeline with per-block KV objects.
+
+    Requests may carry a third element ``prefix_id``: with
+    ``shared_prefix_tokens > 0``, prefill blocks lying fully inside the
+    first ``shared_prefix_tokens`` prompt tokens of same-``prefix_id``
+    requests get equal ``shared_key`` tags — they are one physical
+    allocation at runtime (engine page sharing), and the sharing-aware
+    accounting counts them once."""
     tr = ServeTrace(num_slots, num_layers, block_tokens, recent_window,
                     history_period, float(kv_token_bytes), float(weight_bytes),
                     float(flops_per_token))
     slot_free = [0] * num_slots
     uid = 0
-    for req, (p, d) in enumerate(requests):
+    for req, r in enumerate(requests):
+        p, d = r[0], r[1]
+        prefix_id = r[2] if len(r) > 2 else None
         slot = min(range(num_slots), key=lambda s: slot_free[s])
         a = slot_free[slot]                 # admit step (slot refill)
         end = a + d - 1                     # last decode step
@@ -207,9 +222,13 @@ def build_serve_trace(requests: Sequence[tuple], num_slots: int,
 
         def make_obj(layer, blk, ts, te, birth, is_prefill):
             nonlocal uid
+            shared = None
+            if prefix_id is not None and is_prefill and \
+                    te <= shared_prefix_tokens:
+                shared = (prefix_id, layer, blk)    # same physical pages
             o = KVObject(uid, slot, req, layer, blk,
                          int((te - ts) * kv_token_bytes), birth, end,
-                         ts, te, is_prefill)
+                         ts, te, is_prefill, shared_key=shared)
             uid += 1
             for t in range(birth, end + 1):
                 tokens_now = p + (t - a) + 1

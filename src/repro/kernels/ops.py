@@ -49,7 +49,10 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=0, softcap_val=0.0)
 def paged_decode_attention(q, k_hot, v_hot, k_cold, v_cold, page_table,
                            page_tier, lengths, *, window=0, softcap_val=0.0):
     """Flash-decode over paged, tiered KV pools (hot=device, cold=host).
-    See kernels/paged_decode.py for the pool/page-table layout."""
+    See kernels/paged_decode.py for the pool/page-table layout.  The pools
+    may be larger than the table addresses (the engine's persistent pools
+    carry free pages and a trailing garbage page); the kernel only visits
+    pages the table maps for each slot's length."""
     if _pallas_enabled():
         from repro.kernels import paged_decode as pd
         return pd.paged_decode_attention(

@@ -18,6 +18,15 @@ per-slot, not global, which is what kills the page-grain false sharing the
 paper argues against: a short slot's pages never ride along when a long
 slot's history is demoted.
 
+The pools the kernel reads are **persistent** in the serving engine
+(models/kvcache.py::PagedKVPools): decode scatters each new token's KV into
+its physical hot page through the same table before the kernel runs, admit /
+demote / free mutate single pages, and the table arrays are re-uploaded only
+when the PageTable's version changes.  The ``pool_layout`` / ``gather_pools``
+/ ``pack_kv_pools`` helpers below build the pool layout *from a dense cache*
+— the one-shot form used by model-level parity tests and ad-hoc callers, not
+by the engine's steady-state loop (which never re-packs).
+
 The kernel runs one (batch, kv_head) grid cell as a flash-decode loop over
 that slot's logical pages.  Every page — hot or cold — is streamed into a
 double-buffered VMEM window with `pltpu.make_async_copy`: while page i is in

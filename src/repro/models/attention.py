@@ -103,6 +103,16 @@ def attention(params, cfg, x, positions, *, kind: str = ATTN,
     k = apply_rope(k, positions, theta)
     q = q.reshape(B, Sq, KV, G, hd)
 
+    if cache is not None and "k_hot" in cache:
+        # persistent page pools ARE the cache (kvcache.PagedKVPools): write
+        # the new token's KV straight into its physical hot page and read
+        # back through the page table — no dense buffer exists on this path
+        out, new_cache = _pool_decode_core(cfg, q, k, v, cache, cache_index,
+                                           paged_view, window)
+        out = out.reshape(B, Sq, H * hd)
+        out = constrain(out, ("batch", "seq", "heads"))
+        return out @ params["wo"], new_cache
+
     if cache is not None:
         # cache stores K/V with heads folded (B, Smax, KV*hd) for shardability
         kf = k.reshape(B, Sq, KV * hd)
@@ -179,6 +189,54 @@ def _paged_decode_core(cfg, q, k_all, v_all, cache_index, paged_view, window):
         q.reshape(B, KV * G, hd), k_hot, v_hot, k_cold, v_cold, table, tier,
         lengths, window=window, softcap_val=cfg.attn_softcap)
     return out
+
+
+def _pool_decode_core(cfg, q, k, v, cache, cache_index, paged_view, window):
+    """Decode attention with the persistent page pools as the cache.
+
+    ``cache`` holds one attention layer's pools ({"k_hot","v_hot","k_cold",
+    "v_cold"}, kvcache.PagedKVPools layout); ``paged_view`` carries the
+    layer-independent page table / tier arrays (cached by the engine,
+    re-uploaded only on layout deltas), the active-slot mask, and the
+    garbage-page index.  The new token's KV is scattered into each slot's
+    physical write page (inactive slots are redirected to the garbage page so
+    lockstep decode can never corrupt a page a live slot references — the
+    engine's pre-step CoW guarantees every active write page is exclusive),
+    then attention reads the pools through ops.paged_decode_attention.
+    Returns (out (B,1,KV,G,hd)-shaped, new_cache) — the cold pools pass
+    through untouched: decode never writes below a boundary.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    B, Sq, KV, G, hd = q.shape
+    assert Sq == 1 and paged_view is not None and cache_index is not None, \
+        "pool-form caches are decode-only (the engine prefills densely)"
+    page = paged_view["page_tokens"]
+    table_arr = paged_view["page_table"]
+    tier_arr = paged_view["page_tier"]
+    ci = jnp.asarray(cache_index, jnp.int32)
+    ci = ci if ci.ndim >= 1 else jnp.broadcast_to(ci, (B,))
+    rows = jnp.arange(B)
+    phys = table_arr[rows, ci // page]
+    active = paged_view.get("active")
+    if active is not None:
+        phys = jnp.where(active, phys, paged_view["garbage_page"])
+    off = ci % page
+    kf = k.reshape(B, KV * hd)
+    vf = v.reshape(B, KV * hd)
+    k_hot = cache["k_hot"].at[phys, off].set(kf)
+    v_hot = cache["v_hot"].at[phys, off].set(vf)
+    new_cache = {"k_hot": k_hot, "v_hot": v_hot,
+                 "k_cold": cache["k_cold"], "v_cold": cache["v_cold"]}
+
+    def pool4(a):
+        return a.reshape(a.shape[0], page, KV, hd)
+
+    out = kernel_ops.paged_decode_attention(
+        q.reshape(B, KV * G, hd), pool4(k_hot), pool4(v_hot),
+        pool4(cache["k_cold"]), pool4(cache["v_cold"]), table_arr, tier_arr,
+        ci + 1, window=window, softcap_val=cfg.attn_softcap)
+    return out, new_cache
 
 
 # ------------------------------------------------------------------- MLA ----

@@ -233,7 +233,8 @@ def retier(caches, max_seq: int, cold_len: int) -> TieredCache:
 
 
 class PageTable:
-    """Slot-local logical->physical page mapping over two physical pools.
+    """Slot-local logical->physical page mapping over two physical pools —
+    a true physical-page allocator with reference counting.
 
     Pages are ``page_tokens`` tokens of KV.  Each slot owns an ordered list
     of logical pages; page i lives either in the hot pool (tier 0) or the
@@ -241,6 +242,18 @@ class PageTable:
     its logical pages (the cold *boundary*), and within one residency a
     slot's boundary only moves forward — pages are demoted hot->cold as the
     hot window slides, never resurrected until the slot is refilled.
+
+    Sharing (vLLM-style prefix sharing): ``share(dst, src, n)`` maps the
+    first n logical pages of ``dst`` onto ``src``'s physical pages, bumping
+    per-page refcounts.  A shared page is read-only; the first divergent
+    write must go through ``cow`` (copy-on-write: the writer gets a private
+    physical page).  Demoting a shared page gives the demoting slot a cold
+    *twin* copy — memoized per hot page, so N sharers demoting the same
+    logical page move its bytes exactly once.
+
+    ``version`` increments on every mutation; callers caching ``as_arrays``
+    output re-upload only when it changes (incremental layout deltas, never
+    per-step rebuilds).
     """
 
     FREE = -1
@@ -251,11 +264,18 @@ class PageTable:
         self.slots, self.pages_per_slot = slots, pages_per_slot
         self.page_tokens = page_tokens
         n = slots * pages_per_slot
-        self.hot_free = list(range((hot_pages or n) - 1, -1, -1))
-        self.cold_free = list(range((cold_pages or n) - 1, -1, -1))
+        self.n_hot = hot_pages or n
+        self.n_cold = cold_pages or n
+        self.hot_free = list(range(self.n_hot - 1, -1, -1))
+        self.cold_free = list(range(self.n_cold - 1, -1, -1))
+        self.hot_ref = [0] * self.n_hot
+        self.cold_ref = [0] * self.n_cold
         self.table = [[self.FREE] * pages_per_slot for _ in range(slots)]
         self.tier = [[self.FREE] * pages_per_slot for _ in range(slots)]
         self.n_pages = [0] * slots
+        self.cold_twin: Dict[int, int] = {}      # hot phys -> cold twin phys
+        self._twin_of: Dict[int, int] = {}       # cold phys -> hot phys
+        self.version = 0
 
     # ------------------------------------------------------------ queries --
     def cold_pages(self, slot: int) -> int:
@@ -269,12 +289,55 @@ class PageTable:
     def cold_tokens(self, slot: int) -> int:
         return self.cold_pages(slot) * self.page_tokens
 
+    def _refs(self, tier: int):
+        return self.cold_ref if tier == 1 else self.hot_ref
+
+    def _free(self, tier: int):
+        return self.cold_free if tier == 1 else self.hot_free
+
+    def refcount(self, slot: int, page_idx: int) -> int:
+        return self._refs(self.tier[slot][page_idx])[
+            self.table[slot][page_idx]]
+
+    def is_shared(self, slot: int, page_idx: int) -> bool:
+        return self.refcount(slot, page_idx) > 1
+
+    def pages_in_use(self) -> int:
+        """Distinct physical pages currently allocated across both pools."""
+        return (self.n_hot - len(self.hot_free)
+                + self.n_cold - len(self.cold_free))
+
     def as_arrays(self):
         """(page_table, page_tier) int32 arrays for kernels/paged_decode.py."""
         return (jnp.asarray(self.table, jnp.int32),
                 jnp.asarray(self.tier, jnp.int32))
 
     # ---------------------------------------------------------- mutations --
+    def _acquire(self, tier: int) -> int:
+        pool = self._free(tier)
+        if not pool:
+            raise ValueError(f"{'cold' if tier else 'hot'} pool exhausted")
+        phys = pool.pop()
+        self._refs(tier)[phys] = 1
+        return phys
+
+    def _release(self, tier: int, phys: int) -> None:
+        refs = self._refs(tier)
+        refs[phys] -= 1
+        assert refs[phys] >= 0, f"tier {tier} page {phys}: negative refcount"
+        if refs[phys] == 0:
+            self._free(tier).append(phys)
+            if tier == 0:
+                # hot page gone: its cold twin (if any) lives on through its
+                # own refs, but can no longer be reached for dedup
+                twin = self.cold_twin.pop(phys, None)
+                if twin is not None:
+                    self._twin_of.pop(twin, None)
+            else:
+                src = self._twin_of.pop(phys, None)
+                if src is not None:
+                    self.cold_twin.pop(src, None)
+
     def alloc(self, slot: int, tier: int) -> int:
         """Append one logical page to ``slot`` in the given tier; returns the
         physical page id.  Raises when the slot or the pool is exhausted."""
@@ -284,41 +347,98 @@ class PageTable:
         if tier == 1 and i != self.cold_pages(slot):
             raise ValueError(f"slot {slot}: cold alloc would break the "
                              "cold-prefix invariant")
-        pool = self.cold_free if tier == 1 else self.hot_free
-        if not pool:
-            raise ValueError(f"{'cold' if tier else 'hot'} pool exhausted")
-        phys = pool.pop()
+        phys = self._acquire(tier)
         self.table[slot][i] = phys
         self.tier[slot][i] = tier
         self.n_pages[slot] = i + 1
+        self.version += 1
         return phys
 
-    def free_slot(self, slot: int) -> int:
-        """Release every page of ``slot`` back to its pool (slot refill /
-        request completion).  Returns the number of pages released."""
-        n = self.n_pages[slot]
+    def share(self, dst: int, src: int, n: int) -> int:
+        """Map the first ``n`` logical pages of empty slot ``dst`` onto
+        ``src``'s physical pages (prefix sharing).  Refcounts bump; tiers are
+        inherited from ``src`` (a prefix of src's tier row is itself a valid
+        cold-prefix pattern).  Returns the number of pages shared."""
+        if self.n_pages[dst]:
+            raise ValueError(f"slot {dst}: share requires an empty slot")
+        if n > self.n_pages[src]:
+            raise ValueError(f"slot {src}: only {self.n_pages[src]} pages "
+                             f"allocated, cannot share {n}")
         for i in range(n):
-            (self.cold_free if self.tier[slot][i] == 1
-             else self.hot_free).append(self.table[slot][i])
-            self.table[slot][i] = self.tier[slot][i] = self.FREE
-        self.n_pages[slot] = 0
+            phys, tier = self.table[src][i], self.tier[src][i]
+            self._refs(tier)[phys] += 1
+            self.table[dst][i] = phys
+            self.tier[dst][i] = tier
+        self.n_pages[dst] = n
+        if n:
+            self.version += 1
         return n
 
-    def demote(self, slot: int, page_idx: int) -> int:
-        """Move one page hot->cold.  Only the page at the cold boundary may
-        move (prefix invariant).  Returns the new cold physical id."""
+    def cow(self, slot: int, page_idx: int) -> Optional[tuple]:
+        """Copy-on-write: give ``slot`` a private physical page for logical
+        page ``page_idx`` before a divergent write.  No-op (returns None)
+        when the page is already exclusive; otherwise returns
+        ``(src_phys, new_phys, tier)`` — the caller must copy the page's
+        data from src to new in that tier's pool."""
+        if page_idx >= self.n_pages[slot]:
+            raise ValueError(f"slot {slot}: page {page_idx} not allocated")
+        if not self.is_shared(slot, page_idx):
+            return None
+        tier = self.tier[slot][page_idx]
+        src = self.table[slot][page_idx]
+        new = self._acquire(tier)
+        self._refs(tier)[src] -= 1
+        self.table[slot][page_idx] = new
+        self.version += 1
+        return (src, new, tier)
+
+    def free_slot(self, slot: int) -> int:
+        """Release every page reference of ``slot`` (slot refill / request
+        completion); a physical page returns to its free list only when its
+        last reference drops.  Returns the number of references released."""
+        n = self.n_pages[slot]
+        for i in range(n):
+            self._release(self.tier[slot][i], self.table[slot][i])
+            self.table[slot][i] = self.tier[slot][i] = self.FREE
+        self.n_pages[slot] = 0
+        if n:
+            self.version += 1
+        return n
+
+    def demote(self, slot: int, page_idx: int) -> tuple:
+        """Move one page of ``slot`` hot->cold.  Only the page at the cold
+        boundary may move (prefix invariant).
+
+        Exclusive page: the classic move (hot page freed, cold page
+        allocated, data must be copied).  Shared page: the demoting slot
+        gets a cold *twin* — allocated and copied on the first demotion,
+        reused (refcount bump, no copy) by every later sharer, so shared
+        bytes migrate exactly once.  Returns ``(cold_phys, src_hot_phys,
+        copied)``; the caller copies pool data src->cold iff ``copied``.
+        """
         if page_idx != self.cold_pages(slot):
             raise ValueError(f"slot {slot}: demote({page_idx}) is not the "
                              f"cold boundary {self.cold_pages(slot)}")
         if page_idx >= self.n_pages[slot]:
             raise ValueError(f"slot {slot}: page {page_idx} not allocated")
-        if not self.cold_free:
-            raise ValueError("cold pool exhausted")
-        self.hot_free.append(self.table[slot][page_idx])
-        phys = self.cold_free.pop()
-        self.table[slot][page_idx] = phys
+        src = self.table[slot][page_idx]
+        twin = self.cold_twin.get(src)
+        if twin is not None and self.cold_ref[twin] > 0:
+            self.cold_ref[twin] += 1
+            cold_phys, copied = twin, False
+        else:
+            if not self.cold_free:
+                raise ValueError("cold pool exhausted")
+            cold_phys = self._acquire(1)
+            copied = True
+            if self.hot_ref[src] > 1:        # others still share: memoize
+                self.cold_twin[src] = cold_phys
+                self._twin_of[cold_phys] = src
+        self._release(0, src)
+        self.table[slot][page_idx] = cold_phys
         self.tier[slot][page_idx] = 1
-        return phys
+        self.version += 1
+        return (cold_phys, src, copied)
 
     def splice_slot(self, slot: int, tokens: int, cold_tokens: int) -> int:
         """Refill ``slot`` with a fresh request: free its pages, then allocate
@@ -333,11 +453,17 @@ class PageTable:
 
     def check(self) -> None:
         """Assert structural invariants (used by the property tests)."""
-        for tier, pool in ((0, self.hot_free), (1, self.cold_free)):
-            used = [self.table[s][i] for s in range(self.slots)
-                    for i in range(self.n_pages[s])
-                    if self.tier[s][i] == tier]
-            assert len(used) == len(set(used)), f"tier {tier}: double alloc"
+        import collections as _c
+        for tier, pool, refs in ((0, self.hot_free, self.hot_ref),
+                                 (1, self.cold_free, self.cold_ref)):
+            used = _c.Counter(self.table[s][i] for s in range(self.slots)
+                              for i in range(self.n_pages[s])
+                              if self.tier[s][i] == tier)
+            for phys, r in enumerate(refs):
+                assert r >= 0, f"tier {tier}: negative refcount at {phys}"
+                assert used.get(phys, 0) == r, \
+                    f"tier {tier}: page {phys} refcount {r} != " \
+                    f"{used.get(phys, 0)} references (double alloc / leak)"
             assert not (set(used) & set(pool)), f"tier {tier}: used page free"
         for s in range(self.slots):
             n, nc = self.n_pages[s], self.cold_pages(s)
@@ -345,6 +471,10 @@ class PageTable:
             assert all(self.tier[s][i] == 0 for i in range(nc, n))
             assert all(self.table[s][i] == self.FREE for i in
                        range(n, self.pages_per_slot))
+        for src, twin in self.cold_twin.items():
+            assert self.hot_ref[src] > 0, "twin memo for a freed hot page"
+            assert self.cold_ref[twin] > 0, "twin memo for a freed cold page"
+            assert self._twin_of.get(twin) == src
 
 
 def copy_slot_rows(dst_tree, src_tree, slot: int, lo: int, hi: int,
@@ -389,6 +519,9 @@ class PagedTieredCache:
     boundaries: Any               # (B,) int32 cold tokens per slot
     page_tokens: int
     max_seq: int
+    # host-side mirror of ``boundaries``: updated incrementally on admit /
+    # demote so per-step planning never round-trips the device array
+    host_boundaries: Optional[list] = None
 
     def merged(self):
         """Masked where-merge: rows below each slot's boundary read the cold
@@ -416,13 +549,18 @@ class PagedTieredCache:
 
     def set_boundary(self, slot: int, cold_tokens: int):
         assert cold_tokens % self.page_tokens == 0
+        if self.host_boundaries is None:
+            self.host_boundaries = [0] * len(jnp.asarray(self.boundaries))
+        self.host_boundaries[slot] = int(cold_tokens)
         self.boundaries = jnp.asarray(self.boundaries).at[slot].set(
             cold_tokens)
 
     def demote_rows(self, slot: int, new_cold_tokens: int):
         """Advance slot's boundary: copy rows [old, new) from hot into the
-        host-resident cold tree — only this slot's pages move."""
-        old = int(jnp.asarray(self.boundaries)[slot])
+        host-resident cold tree — only this slot's pages move.  The old
+        boundary comes from the host-side mirror (no device round-trip)."""
+        old = self.host_boundaries[slot] if self.host_boundaries is not None \
+            else int(jnp.asarray(self.boundaries)[slot])
         if new_cold_tokens <= old:
             return 0
         self.cold = to_host(copy_slot_rows(self.cold, self.hot, slot, old,
@@ -441,7 +579,240 @@ def init_paged_cache(cfg, batch: int, max_seq: int, page_tokens: int,
         lambda l: l if _is_seq_leaf(l, max_seq) else None, hot)
     return PagedTieredCache(to_host(cold), hot,
                             jnp.zeros((batch,), jnp.int32), page_tokens,
-                            max_seq)
+                            max_seq, host_boundaries=[0] * batch)
+
+
+# ------------------------------------------------- persistent pools (serve) --
+
+ATTN_KINDS = (ATTN, LOCAL, SHARED_ATTN)
+
+
+class PagedKVPools:
+    """Persistent physical KV page pools — the storage paged decode consumes.
+
+    This inverts the ownership between logical caches and physical memory:
+    instead of a dense per-slot cache that gets re-packed into pools every
+    step, the pools ARE the cache.  Per attention layer the storage is
+
+      k_hot / v_hot    (n_hot+1, page, KV*hd)   device memory (HBM)
+      v_cold / k_cold  (n_cold,  page, KV*hd)   host memory
+
+    addressed through one layer-independent :class:`PageTable`.  Decode
+    *writes into the pools* via the table (models/attention.py resolves each
+    slot's write position to a physical hot page); admit / demote / free are
+    incremental per-page deltas; ``as_arrays`` uploads of the table happen
+    only when the table's ``version`` changes.  Non-attention layer caches
+    (stateful kinds, MLA) keep their dense batched form inside ``tree``.
+
+    The extra hot page at index ``garbage`` (= n_hot) absorbs the lockstep
+    writes of inactive batch slots, so a finished slot can never scribble
+    over a physical page a live slot still references.
+
+    ``stats`` counts the events the steady-state acceptance test pins to
+    zero: ``repacks`` (dense->pool re-packs — never in this design),
+    ``table_uploads`` (layout deltas), ``page_copies`` (demote/CoW data
+    movement), ``admit_page_writes`` (prefill landing in the pools).
+    """
+
+    def __init__(self, cfg, slots: int, max_seq: int, page_tokens: int,
+                 dtype=jnp.bfloat16, hot_pages: Optional[int] = None,
+                 cold_pages: Optional[int] = None):
+        assert max_seq % page_tokens == 0, (max_seq, page_tokens)
+        self.cfg, self.num_slots = cfg, slots
+        self.max_seq, self.page_tokens = max_seq, page_tokens
+        self.num_pages = max_seq // page_tokens
+        self.table = PageTable(slots, self.num_pages, page_tokens,
+                               hot_pages, cold_pages)
+        self.garbage = self.table.n_hot          # scratch page, never mapped
+        self.tree = self._init_tree(dtype)
+        self._cached_arrays = None
+        self._cached_version = -1
+        self.stats = {"repacks": 0, "table_uploads": 0, "page_copies": 0,
+                      "admit_page_writes": 0}
+        self.peak_pages = 0
+
+    # --------------------------------------------------------- construction --
+    def _pool_layer(self, kind: str, dtype):
+        cfg = self.cfg
+        if kind in ATTN_KINDS:
+            D = cfg.num_kv_heads * cfg.head_dim
+            hot = jnp.zeros((self.table.n_hot + 1, self.page_tokens, D), dtype)
+            cold = jnp.zeros((self.table.n_cold, self.page_tokens, D), dtype)
+            return {"k_hot": hot, "v_hot": hot,
+                    "k_cold": cold, "v_cold": cold}
+        return init_layer_cache(cfg, kind, self.num_slots, self.max_seq, dtype)
+
+    def _init_tree(self, dtype):
+        cfg = self.cfg
+
+        def host_cold(entry, kind):
+            if kind in ATTN_KINDS:
+                entry["k_cold"] = to_host(entry["k_cold"])
+                entry["v_cold"] = to_host(entry["v_cold"])
+            return entry
+
+        pro = [host_cold(self._pool_layer(k, dtype), k) for k in cfg.prologue]
+
+        def stacked(kind):
+            one = self._pool_layer(kind, dtype)
+            d = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.num_periods,) + a.shape).copy()
+                if cfg.num_periods > 1 else a[None], one)
+            return host_cold(d, kind)
+
+        return {"prologue": pro, "slots": [stacked(k) for k in cfg.period]}
+
+    def _attn_entries(self, *others):
+        """Yield (stacked, pool_entry[, other_entry...]) per attention layer."""
+        for i, kind in enumerate(self.cfg.prologue):
+            if kind in ATTN_KINDS:
+                yield (False, self.tree["prologue"][i],
+                       *(o["prologue"][i] for o in others))
+        for s, kind in enumerate(self.cfg.period):
+            if kind in ATTN_KINDS:
+                yield (True, self.tree["slots"][s],
+                       *(o["slots"][s] for o in others))
+
+    def _note(self):
+        self.peak_pages = max(self.peak_pages, self.table.pages_in_use())
+
+    # -------------------------------------------------------------- layout --
+    def arrays(self):
+        """(page_table, page_tier) device arrays, re-uploaded only when the
+        PageTable mutated since the last call (incremental layout deltas)."""
+        if self._cached_version != self.table.version:
+            self._cached_arrays = self.table.as_arrays()
+            self._cached_version = self.table.version
+            self.stats["table_uploads"] += 1
+        return self._cached_arrays
+
+    def paged_view(self, active_mask) -> Dict[str, Any]:
+        """The per-step view models/attention.py consumes.  Everything in it
+        is either cached (table/tier arrays, active mask) or a python
+        constant — building it costs no transfers in steady state."""
+        table_arr, tier_arr = self.arrays()
+        return {"page_table": table_arr, "page_tier": tier_arr,
+                "page_tokens": self.page_tokens, "active": active_mask,
+                "garbage_page": self.garbage}
+
+    # ----------------------------------------------------------- mutations --
+    def free_slot(self, slot: int) -> int:
+        n = self.table.free_slot(slot)
+        self._note()
+        return n
+
+    def share(self, dst: int, src: int, n: int) -> int:
+        n = self.table.share(dst, src, n)
+        self._note()
+        return n
+
+    def ensure_write_page(self, slot: int, pos: int) -> None:
+        """Pre-step guarantee for the decode write at token ``pos``: the page
+        holding ``pos`` exists and is private (CoW on a shared page — the
+        first divergent write past a shared-prefix fork point)."""
+        while self.table.n_pages[slot] * self.page_tokens < pos + 1:
+            self.table.alloc(slot, 0)
+        self._note()
+        self.cow_for_write(slot, pos)
+
+    def cow_for_write(self, slot: int, pos: int) -> bool:
+        """Copy-on-write before a divergent write at token ``pos``; no-op on
+        exclusive pages.  Returns True when a private copy was made."""
+        idx = pos // self.page_tokens
+        if idx >= self.table.n_pages[slot]:
+            return False
+        r = self.table.cow(slot, idx)
+        if r is None:
+            return False
+        src, new, tier = r
+        self._note()
+        kk, vv = ("k_cold", "v_cold") if tier == 1 else ("k_hot", "v_hot")
+        for entry in self._attn_entries():
+            stacked, pool = entry[0], entry[1]
+            if stacked:
+                k2 = pool[kk].at[:, new].set(pool[kk][:, src])
+                v2 = pool[vv].at[:, new].set(pool[vv][:, src])
+            else:
+                k2 = pool[kk].at[new].set(pool[kk][src])
+                v2 = pool[vv].at[new].set(pool[vv][src])
+            if tier == 1:
+                k2, v2 = to_host(k2), to_host(v2)
+            pool[kk], pool[vv] = k2, v2
+        self.stats["page_copies"] += 1
+        return True
+
+    def admit_rows(self, fresh, slot: int, pages) -> None:
+        """Write whole pages of a batch-1 prefilled dense cache into the
+        slot's private hot pages.  Shared pages are skipped by the caller —
+        their physical pages already hold bit-identical data."""
+        pages = list(pages)
+        if not pages:
+            return
+        assert all(self.table.tier[slot][i] == 0 for i in pages), \
+            "admit writes land in the hot pool"
+        phys = [self.table.table[slot][i] for i in pages]
+        pg = self.page_tokens
+        for entry in self._attn_entries(fresh):
+            stacked, pool, fr = entry
+            kh, vh = pool["k_hot"], pool["v_hot"]
+            for i, ph in zip(pages, phys):
+                lo = i * pg
+                if stacked:                  # pool (P,n,pg,D), fresh (P,1,S,D)
+                    kh = kh.at[:, ph].set(fr["k"][:, 0, lo:lo + pg])
+                    vh = vh.at[:, ph].set(fr["v"][:, 0, lo:lo + pg])
+                else:                        # pool (n,pg,D),   fresh (1,S,D)
+                    kh = kh.at[ph].set(fr["k"][0, lo:lo + pg])
+                    vh = vh.at[ph].set(fr["v"][0, lo:lo + pg])
+            pool["k_hot"], pool["v_hot"] = kh, vh
+        self.stats["admit_page_writes"] += len(pages)
+
+    def splice_other(self, fresh, slot: int) -> None:
+        """Row-splice the non-attention layer caches (stateful kinds, MLA) of
+        a fresh batch-1 cache into the pool tree — same semantics as
+        ``splice_slot`` on the dense layout."""
+        def one(stacked):
+            def f(big, small):
+                if big is None:
+                    return None
+                if stacked:
+                    return big.at[:, slot].set(small[:, 0])
+                return big.at[slot].set(small[0])
+            return f
+
+        for i, kind in enumerate(self.cfg.prologue):
+            if kind not in ATTN_KINDS:
+                self.tree["prologue"][i] = jax.tree.map(
+                    one(False), self.tree["prologue"][i],
+                    fresh["prologue"][i])
+        for s, kind in enumerate(self.cfg.period):
+            if kind not in ATTN_KINDS:
+                self.tree["slots"][s] = jax.tree.map(
+                    one(True), self.tree["slots"][s], fresh["slots"][s])
+
+    def demote_boundary(self, slot: int) -> bool:
+        """Advance the slot's cold boundary one page.  Pool data moves
+        hot->cold only when the PageTable allocated a fresh cold copy
+        (exclusive page, or the first sharer to demote) — twin reuse by
+        later sharers moves zero bytes, which is how shared pages' migration
+        bytes are counted exactly once.  Returns whether data was copied."""
+        idx = self.table.cold_pages(slot)
+        cold_phys, src, copied = self.table.demote(slot, idx)
+        self._note()
+        if copied:
+            for entry in self._attn_entries():
+                stacked, pool = entry
+                if stacked:
+                    kc = pool["k_cold"].at[:, cold_phys].set(
+                        pool["k_hot"][:, src])
+                    vc = pool["v_cold"].at[:, cold_phys].set(
+                        pool["v_hot"][:, src])
+                else:
+                    kc = pool["k_cold"].at[cold_phys].set(pool["k_hot"][src])
+                    vc = pool["v_cold"].at[cold_phys].set(pool["v_hot"][src])
+                pool["k_cold"], pool["v_cold"] = to_host(kc), to_host(vc)
+            self.stats["page_copies"] += 1
+        return copied
 
 
 def cache_logical_axes(cfg) -> Dict[str, Any]:

@@ -28,7 +28,8 @@ contract and the migration guide.
 """
 from repro.runtime.objects import (AccessTimeline, DataObject, MemoryTier,
                                    ServingWorkload, TrainingWorkload,
-                                   Workload, as_workload, tiers_from_hw)
+                                   Workload, as_workload, peak_object_bytes,
+                                   tiers_from_hw)
 from repro.runtime.plan import (Candidate, PlacementPlan, ServeCandidate,
                                 enumerate_candidates, interval_stats,
                                 mi_to_periods, plan, plan_serving,
@@ -44,7 +45,8 @@ __all__ = [
     "POLICIES", "PlacementPlan", "PlacementPolicy", "PlacementResult",
     "ServeCandidate", "ServingWorkload", "TrainingWorkload", "Unit",
     "Workload", "as_workload", "build_units", "enumerate_candidates",
-    "get_policy", "interval_stats", "list_policies", "mi_to_periods", "plan",
-    "plan_serving", "plan_training", "register_policy", "serve_token_stats",
-    "simulate", "slot_kv_weights", "tiers_from_hw",
+    "get_policy", "interval_stats", "list_policies", "mi_to_periods",
+    "peak_object_bytes", "plan", "plan_serving", "plan_training",
+    "register_policy", "serve_token_stats", "simulate", "slot_kv_weights",
+    "tiers_from_hw",
 ]

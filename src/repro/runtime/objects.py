@@ -52,9 +52,15 @@ class DataObject:
     """A placeable data object on the unified timeline.
 
     Serving KV blocks (``hmsim.KVObject``) are consumed duck-typed — the
-    policies only touch ``uid``/``bytes``/``birth``/``death``/``accesses`` —
-    so this class is instantiated for training-derived timelines and any
-    synthetic workloads."""
+    policies only touch ``uid``/``bytes``/``birth``/``death``/``accesses``
+    (and optionally ``shared_key``) — so this class is instantiated for
+    training-derived timelines and any synthetic workloads.
+
+    ``shared_key``: objects carrying the same non-None key are aliases of
+    ONE physical allocation (a shared prompt prefix mapped to the same
+    refcounted pages).  Sharing-aware policies and the capacity accounting
+    charge the group's bytes once; reads still charge per access (each
+    reader streams the bytes through its own attention)."""
     uid: int
     bytes: int
     birth: int
@@ -62,10 +68,50 @@ class DataObject:
     accesses: List[int] = field(default_factory=list)   # sorted step indices
     kind: str = "object"            # "weight" | "activation" | "kv" | ...
     meta: dict = field(default_factory=dict)
+    shared_key: Optional[tuple] = None
 
     @property
     def lifetime(self) -> int:
         return max(0, self.death - self.birth)
+
+
+def peak_object_bytes(objects) -> float:
+    """Peak concurrently-live bytes over a set of objects, counting every
+    shared group (equal non-None ``shared_key``) once: the group's bytes are
+    live exactly over the union of its members' [birth, death] intervals —
+    physical pages exist while any reference does, like a
+    ``kvcache.PageTable`` refcount."""
+    deltas: Dict[int, float] = {}
+
+    def add(t, b):
+        deltas[t] = deltas.get(t, 0.0) + b
+
+    groups: Dict[tuple, List[Any]] = {}
+    for o in objects:
+        k = getattr(o, "shared_key", None)
+        if k is None:
+            add(o.birth, o.bytes)
+            add(o.death + 1, -o.bytes)
+        else:
+            groups.setdefault(k, []).append(o)
+    for objs in groups.values():
+        b = objs[0].bytes
+        ivs = sorted((o.birth, o.death) for o in objs)
+        lo, hi = ivs[0]
+        for lo2, hi2 in ivs[1:]:
+            if lo2 <= hi + 1:                     # refcount never hit zero
+                hi = max(hi, hi2)
+            else:
+                add(lo, b)
+                add(hi + 1, -b)
+                lo, hi = lo2, hi2
+        add(lo, b)
+        add(hi + 1, -b)
+    peak = cur = 0.0
+    for t in sorted(deltas):
+        cur += deltas[t]
+        peak = max(peak, cur)
+    return peak
 
 
 @dataclass
@@ -119,18 +165,11 @@ class AccessTimeline:
         return self.reserved_bytes
 
     def peak_bytes(self) -> float:
-        """Peak concurrently-live object bytes over the timeline."""
+        """Peak concurrently-live object bytes over the timeline (shared
+        groups counted once — see ``peak_object_bytes``)."""
         if self.kind == "serving" and hasattr(self.source, "peak_kv_bytes"):
             return self.source.peak_kv_bytes()   # same object set, one impl
-        deltas: Dict[int, float] = {}
-        for o in self.objects:
-            deltas[o.birth] = deltas.get(o.birth, 0.0) + o.bytes
-            deltas[o.death + 1] = deltas.get(o.death + 1, 0.0) - o.bytes
-        peak = cur = 0.0
-        for t in sorted(deltas):
-            cur += deltas[t]
-            peak = max(peak, cur)
-        return peak
+        return peak_object_bytes(self.objects)
 
     def step_time_all_fast(self, s: int, hw: HWSpec) -> float:
         """Roofline step time with every byte in the fast tier."""

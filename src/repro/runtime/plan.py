@@ -284,10 +284,22 @@ def mi_to_periods(profile, mi: int) -> int:
 def slot_kv_weights(trace) -> List[float]:
     """Per-slot share of KV byte-seconds over the timeline: how much cache
     each slot's decode schedule actually keeps alive.  The per-slot analogue
-    of the paper's per-object lifetime profile."""
+    of the paper's per-object lifetime profile.
+
+    Sharing-aware: blocks aliasing one physical allocation (equal
+    ``shared_key``) contribute their byte-seconds once, split evenly across
+    the sharers' slots — a tenant does not get a bigger hot window for
+    holding a reference to the same system prompt everyone else holds."""
     w = [0.0] * max(1, trace.num_slots)
+    group_size: dict = {}
     for o in trace.objects:
-        w[o.slot % len(w)] += o.bytes * (o.death - o.birth + 1)
+        k = getattr(o, "shared_key", None)
+        if k is not None:
+            group_size[k] = group_size.get(k, 0) + 1
+    for o in trace.objects:
+        k = getattr(o, "shared_key", None)
+        share = group_size.get(k, 1) if k is not None else 1
+        w[o.slot % len(w)] += o.bytes * (o.death - o.birth + 1) / share
     total = sum(w) or 1.0
     return [x / total for x in w]
 

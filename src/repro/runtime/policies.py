@@ -153,15 +153,53 @@ class PlacementPolicy:
         self.bytes_s2f = 0.0
         self.bytes_f2s = 0.0
         self.slow_bytes_accessed = 0.0
+        # shared-object groups (equal non-None ``shared_key``): one physical
+        # allocation, one tier, one capacity/migration charge for the group
+        self._shared: Dict[tuple, dict] = {}
 
     # ------------------------------------------------------------- helpers --
+    @staticmethod
+    def _group_key(o):
+        return getattr(o, "shared_key", None)
+
+    def _group(self, o):
+        """Live shared group of ``o``, or None (unshared / first member)."""
+        k = self._group_key(o)
+        if k is None:
+            return None
+        g = self._shared.get(k)
+        return g if g and g["uids"] else None
+
+    def _charge_bytes(self, o) -> float:
+        """Capacity charge of placing ``o``: zero when its shared group is
+        already resident (the physical pages exist exactly once)."""
+        return 0.0 if self._group(o) is not None else o.bytes
+
     def _place(self, o, fast: bool):
         self.live[o.uid] = o
+        k = self._group_key(o)
+        if k is not None:
+            g = self._group(o)
+            if g is not None:              # adopt the group's placement, free
+                g["uids"].add(o.uid)
+                self.in_fast[o.uid] = g["fast"]
+                return
+            self._shared[k] = {"fast": fast, "uids": {o.uid}}
         self.in_fast[o.uid] = fast
         if fast:
             self.fast_used += o.bytes
 
     def _demote(self, o):
+        g = self._group(o)
+        if g is not None:
+            if g["fast"]:                  # whole group moves, bytes once
+                g["fast"] = False
+                for uid in g["uids"]:
+                    self.in_fast[uid] = False
+                self.fast_used -= o.bytes
+                self.migrations += 1
+                self.bytes_f2s += o.bytes
+            return
         if self.in_fast.get(o.uid):
             self.in_fast[o.uid] = False
             self.fast_used -= o.bytes
@@ -169,6 +207,16 @@ class PlacementPolicy:
             self.bytes_f2s += o.bytes
 
     def _promote(self, o):
+        g = self._group(o)
+        if g is not None:
+            if not g["fast"]:
+                g["fast"] = True
+                for uid in g["uids"]:
+                    self.in_fast[uid] = True
+                self.fast_used += o.bytes
+                self.migrations += 1
+                self.bytes_s2f += o.bytes
+            return
         if not self.in_fast.get(o.uid):
             self.in_fast[o.uid] = True
             self.fast_used += o.bytes
@@ -178,13 +226,26 @@ class PlacementPolicy:
     # --------------------------------------------------------------- hooks --
     def on_free(self, t: int, objs: Iterable) -> None:
         for o in objs:
-            if self.in_fast.pop(o.uid, False):
-                self.fast_used -= o.bytes
+            k = self._group_key(o)
+            fast = self.in_fast.pop(o.uid, False)
             self.live.pop(o.uid, None)
+            if k is not None:
+                g = self._shared.get(k)
+                if g is not None:
+                    g["uids"].discard(o.uid)
+                    if g["uids"]:
+                        continue           # pages survive via other refs
+                    self._shared.pop(k, None)
+                    if g["fast"]:
+                        self.fast_used -= o.bytes
+                continue
+            if fast:
+                self.fast_used -= o.bytes
 
     def on_admit(self, t: int, objs: Iterable) -> None:
         for o in objs:
-            self._place(o, self.fast_used + o.bytes <= self.fast_bytes)
+            self._place(o, self.fast_used + self._charge_bytes(o)
+                        <= self.fast_bytes)
 
     def on_birth(self, t: int, objs: Iterable) -> None:
         # objects just written by compute (fast-resident at production);
@@ -400,13 +461,29 @@ class SentinelLifetime(PlacementPolicy):
         hi = bisect.bisect_right(o.accesses, t + self.lookahead)
         return hi - lo
 
+    def _group_members(self, o):
+        """Live members of ``o``'s shared group (just ``o`` when unshared) —
+        a shared page's placement serves every sharer, so eviction decisions
+        must consider the whole group."""
+        g = self._group(o)
+        if g is None:
+            return [o]
+        return [self.live[uid] for uid in g["uids"] if uid in self.live]
+
+    def _group_next_access(self, o, t: int) -> Optional[int]:
+        """Soonest next access across the group (Belady on shared pages)."""
+        nas = [self._next_access(m, t) for m in self._group_members(o)]
+        nas = [x for x in nas if x is not None]
+        return min(nas) if nas else None
+
     def _evict_for(self, need: float, t: int) -> None:
         """Make room by evicting farthest-next-access fast objects (Belady
-        on the known schedule)."""
+        on the known schedule; shared groups judged by their most-urgent
+        member, since demoting one member moves the whole group)."""
         if self.fast_used + need <= self.fast_bytes:
             return
         victims = [o for o in self.live.values() if self.in_fast.get(o.uid)]
-        victims.sort(key=lambda o: -(self._next_access(o, t) or 10 ** 12))
+        victims.sort(key=lambda o: -(self._group_next_access(o, t) or 10 ** 12))
         for v in victims:
             if self.fast_used + need <= self.fast_bytes:
                 break
@@ -417,6 +494,9 @@ class SentinelLifetime(PlacementPolicy):
         # hot-window objects displace colder incumbents, cold history is born
         # slow — the serving analogue of "born in fast" vs residual offload
         for o in objs:
+            if self._group(o) is not None:
+                self._place(o, True)        # pages already resident: free ride
+                continue
             if self._score(o, t - 1) == 0:
                 self._place(o, False)
                 continue
@@ -435,24 +515,36 @@ class SentinelLifetime(PlacementPolicy):
                                    p[1].uid))
         target = set()
         used = 0.0
+        seen_groups = set()
         for sc, o in scored:
             if sc <= 0:
                 break
-            if used + o.bytes <= self.fast_bytes:
+            k = self._group_key(o)
+            eff = o.bytes if k is None or k not in seen_groups else 0.0
+            if used + eff <= self.fast_bytes:
                 target.add(o.uid)
-                used += o.bytes
+                used += eff
+                if k is not None:
+                    seen_groups.add(k)
         promotes = [o for sc, o in scored
                     if o.uid in target and not self.in_fast.get(o.uid)]
         promotes.sort(key=lambda o: self._next_access(o, t) or 10 ** 12)
         for o in promotes:
+            if self.in_fast.get(o.uid):
+                continue                    # shared group already moved
             if o.bytes > budget_bytes:
                 break
             while self.fast_used + o.bytes > self.fast_bytes:
+                # demoting any member moves its whole shared group, so a
+                # group with a member in the target set is never a victim
+                # (else demote/promote would ping-pong the group's bytes)
                 victims = [v for v in live if self.in_fast.get(v.uid)
-                           and v.uid not in target]
+                           and not any(m.uid in target
+                                       for m in self._group_members(v))]
                 if not victims:
                     break
-                v = min(victims, key=lambda v: self._score(v, t))
+                v = min(victims, key=lambda v: max(
+                    self._score(m, t) for m in self._group_members(v)))
                 if v.bytes > budget_bytes:
                     budget_bytes = -1.0
                     break

@@ -84,3 +84,35 @@ def synthetic_serve_trace(num_requests: int = 12, num_slots: int = 4,
                              kv_token_bytes=kv_token_bytes,
                              weight_bytes=weight_bytes,
                              flops_per_token=flops_per_token)
+
+
+def synthetic_shared_prefix_trace(num_tenants: int = 12, num_slots: int = 4,
+                                  system_tokens: int = 64,
+                                  user_tokens: int = 32,
+                                  decode_tokens: int = 40,
+                                  num_layers: int = 8,
+                                  kv_token_bytes: float = 4096,
+                                  weight_bytes: float = 50e6,
+                                  flops_per_token: float = 2e9,
+                                  shared: bool = True):
+    """N tenants x one common system prompt — the multi-tenant serving
+    workload for prefix sharing on the unified surface.
+
+    Every request carries the same ``system_tokens``-token system prompt
+    followed by a per-tenant user turn (deterministic jitter, no RNG).  With
+    ``shared=True`` the system-prompt KV blocks are tagged as one physical
+    allocation (``KVObject.shared_key``); ``shared=False`` builds the
+    byte-for-byte identical stream *without* sharing — the matched baseline
+    the --shared-prefix benchmark gate compares against."""
+    from repro.core.hmsim import build_serve_trace
+    reqs = []
+    for i in range(num_tenants):
+        p = system_tokens + user_tokens + (i * 17) % 33
+        d = decode_tokens + (i * 11) % 17
+        reqs.append((p, d, 0 if shared else i))
+    return build_serve_trace(reqs, num_slots=num_slots, num_layers=num_layers,
+                             kv_token_bytes=kv_token_bytes,
+                             weight_bytes=weight_bytes,
+                             flops_per_token=flops_per_token,
+                             shared_prefix_tokens=system_tokens
+                             if shared else 0)

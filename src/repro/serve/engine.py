@@ -12,7 +12,7 @@ cache into both tiers asynchronously.  Logits are bit-identical to the
 all-HBM path: the merged view reads the same values, only their placement
 (and therefore fetch bandwidth) differs.
 
-Two tiered layouts:
+Three tiered layouts:
 
   concat (``paged=False``)  one *global* cold boundary (``plan.cold_len``);
       the cold tree is a sequence slice, reads concatenate cold+hot.  Simple,
@@ -20,14 +20,24 @@ Two tiered layouts:
       global prefix for that slot.
   paged  (``paged=True``)   *per-slot* boundaries at page granularity
       (``plan.cold_len_slot``), backed by kvcache.PagedTieredCache plus a
-      kvcache.PageTable that allocates/frees/demotes physical pages — the
-      layout the paged decode kernel (kernels/paged_decode.py) consumes.  A
-      refill touches only the refilled slot's pages; boundary advances demote
-      single pages of the slot that grew.
+      kvcache.PageTable that allocates/frees/demotes physical pages.  The
+      dense hot tree remains the working copy; the masked merge reads it.
+  pools  (``paged=True`` + ``cfg.use_paged_decode``)  the persistent
+      physical page pools (kvcache.PagedKVPools) ARE the cache: decode
+      writes each token's KV into its physical hot page through the page
+      table and attention reads the pools via ops.paged_decode_attention.
+      Steady-state ``step()`` performs zero dense re-packs and zero
+      boundary host-syncs — layout state lives host-side in the PageTable
+      and changes only on admit / page-crossing / demote / free events.
+      Requests submitted with a ``prefix_key`` share their common prompt
+      prefix *physically*: full pages below the fork point map to the same
+      refcounted physical pages (copy-on-write on the first divergent
+      write), so N tenants with one system prompt hold its KV once.
 
 ``sim_migration_bytes`` counts every byte the batcher moves device<->host
-(cold re-hosting), so the two layouts' migration traffic is directly
-comparable (benchmarks/bench_serve.py --paged gates paged <= concat).
+(cold re-hosting), so the layouts' migration traffic is directly comparable
+(benchmarks/bench_serve.py --paged gates paged <= concat; --shared-prefix
+gates shared < unshared).
 """
 from __future__ import annotations
 
@@ -92,15 +102,23 @@ class ContinuousBatcher:
             * cfg.num_layers                       # KV bytes per token, all layers
         self.sim_migration_bytes = 0.0             # device<->host cold traffic
         self.paged = self.tiered = self.caches = self.ptable = None
+        self.pool = None
         if paged:
             page = max(1, plan.page_tokens)
             if max_seq % page:                     # buffer must tile in pages
                 page = next(p for p in range(page, 0, -1) if max_seq % p == 0)
             self.page_tokens = page
-            self.paged = kvcache.init_paged_cache(cfg, batch_slots, max_seq,
-                                                  page, dt)
-            self.ptable = kvcache.PageTable(batch_slots, max_seq // page,
-                                            page)
+            if cfg.use_paged_decode and not cfg.prefix_lm:
+                # persistent pools: the page table owns physical placement,
+                # decode writes through it (no dense mirror to re-pack)
+                self.pool = kvcache.PagedKVPools(cfg, batch_slots, max_seq,
+                                                 page, dt)
+                self.ptable = self.pool.table
+            else:
+                self.paged = kvcache.init_paged_cache(cfg, batch_slots,
+                                                      max_seq, page, dt)
+                self.ptable = kvcache.PageTable(batch_slots, max_seq // page,
+                                                page)
         elif self.cold_len > 0:
             self.tiered = kvcache.init_tiered_cache(cfg, batch_slots, max_seq,
                                                     self.cold_len, dt)
@@ -112,28 +130,89 @@ class ContinuousBatcher:
         self.last_tok = jnp.zeros((batch_slots,), jnp.int32)
         self.outputs = [[] for _ in range(batch_slots)]
         self.queue: list = []
+        # host-side mirrors: per-slot lengths and the active set, kept in
+        # lockstep with the device arrays so per-step bookkeeping (page
+        # targets, boundary advances) never reads a device array back
+        self._host_len = [0] * batch_slots
+        self._active_mask = jnp.zeros((batch_slots,), bool)
+        self._active_inc = jnp.zeros((batch_slots,), jnp.int32)
+        self._prefix_donor: dict = {}          # prefix_key -> (slot, tokens)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, cfg, b, max_seq=max_seq))
 
-    def submit(self, tokens, num_tokens: int):
-        self.queue.append((tokens, num_tokens))
+    def submit(self, tokens, num_tokens: int, prefix_key=None):
+        """Queue a request.  ``prefix_key`` (hashable) marks requests that
+        share a common prompt prefix (e.g. one system prompt per tenant):
+        on the pools layout their common full pages map to the same physical
+        pages, refcounted, with copy-on-write past the fork point."""
+        self.queue.append((tokens, num_tokens, prefix_key))
+
+    def _refresh_active(self):
+        """Re-derive the cached device-side active mask (event-driven: only
+        called when a slot starts or finishes, never per step)."""
+        self._active_mask = jnp.asarray(self.active, bool)
+        self._active_inc = jnp.asarray(
+            [1 if a else 0 for a in self.active], jnp.int32)
 
     def _slot_cold_target(self, slot: int, seq_len: int) -> int:
         """Slot's cold boundary at ``seq_len`` tokens, in whole engine pages
         (the plan's page_tokens may have been adjusted to divide max_seq)."""
         return self.plan.cold_len_slot(slot, seq_len, self.page_tokens)
 
+    def _admit_pool(self, slot: int, tokens, fresh, S: int, prefix_key):
+        """Admit into the persistent pools: free the slot's page refs, map
+        shared-prefix full pages onto the donor's physical pages, allocate
+        private pages for the rest, write the prefilled rows into them, and
+        advance the cold boundary by per-page demotion.  Every operation is
+        an incremental delta on the slot's own pages."""
+        pg = self.page_tokens
+        # stale donor registrations for this slot die with its pages
+        for key in [k for k, (s, _) in self._prefix_donor.items()
+                    if s == slot]:
+            del self._prefix_donor[key]
+        self.pool.free_slot(slot)
+        tok_host = tuple(int(t) for t in jax.device_get(tokens))
+        shared_pages = 0
+        if prefix_key is not None:
+            donor = self._prefix_donor.get(prefix_key)
+            if donor is not None and donor[0] != slot and \
+                    self.ptable.n_pages[donor[0]] > 0:
+                lcp = 0
+                for a, b in zip(tok_host, donor[1]):
+                    if a != b:
+                        break
+                    lcp += 1
+                # only full pages strictly below the write region are shared,
+                # so the page decode writes into is never a shared page
+                shared_pages = min(lcp // pg, self.ptable.n_pages[donor[0]])
+                if shared_pages:
+                    self.pool.share(slot, donor[0], shared_pages)
+            self._prefix_donor[prefix_key] = (slot, tok_host)
+        n = -(-S // pg)
+        for _ in range(self.ptable.n_pages[slot], n):
+            self.ptable.alloc(slot, 0)
+        self.pool.admit_rows(fresh, slot, range(shared_pages, n))
+        self.pool.splice_other(fresh, slot)
+        # cold boundary: demote page by page toward the plan's target (shared
+        # pages already cold, or deduped through a twin, move zero bytes)
+        target = self._slot_cold_target(slot, S)
+        while self.ptable.cold_tokens(slot) < target:
+            if self.pool.demote_boundary(slot):
+                self.sim_migration_bytes += pg * self._row_bytes
+
     def _admit(self):
         for slot in range(self.B):
             if self.active[slot] or not self.queue:
                 continue
-            tokens, budget = self.queue.pop(0)
+            tokens, budget, prefix_key = self.queue.pop(0)
             S = tokens.shape[-1]
             last, fresh = self._prefill(self.params,
                                         {"tokens": tokens[None]})
             # splice this request's prefilled cache row into the batch cache
             # (async dispatch: overlaps with in-flight decode work)
-            if self.paged is not None:
+            if self.pool is not None:
+                self._admit_pool(slot, tokens, fresh, S, prefix_key)
+            elif self.paged is not None:
                 # per-slot boundary: only THIS slot's cold pages are re-hosted
                 cold = self._slot_cold_target(slot, S)
                 self.ptable.splice_slot(slot, S, cold)
@@ -156,39 +235,40 @@ class ContinuousBatcher:
                 self.caches = kvcache.splice_slot(self.caches, fresh, slot,
                                                   self.B)
             self.lengths = self.lengths.at[slot].set(S)
+            self._host_len[slot] = S
             self.last_tok = self.last_tok.at[slot].set(
                 jnp.argmax(last[0, :self.cfg.vocab_size]).astype(jnp.int32))
             self.active[slot] = True
             self.budget[slot] = budget
             self.outputs[slot] = [int(self.last_tok[slot])]
             self.budget[slot] -= 1
+            self._refresh_active()
 
     def step(self):
         """One lockstep decode step across all active slots — each slot writes
-        its KV at its own length (vector cache_index -> row-wise scatter)."""
+        its KV at its own length (vector cache_index -> row-wise scatter).
+
+        On the pools layout the steady-state body is re-pack-free and
+        host-sync-free: the caches handed to the model ARE the persistent
+        pools, the page-table arrays are cached until the table mutates, and
+        all boundary/length bookkeeping runs on host-side mirrors.  Layout
+        work happens only at events (admit, a slot growing into a new page,
+        a boundary advance)."""
         self._admit()
         if not any(self.active):
             return False
         paged_view = None
-        if self.paged is not None:
+        if self.pool is not None:
+            # pre-step page guarantee per active slot: the write page exists
+            # and is private (CoW fires here on the first divergent write
+            # past a shared-prefix fork point — a no-op otherwise)
+            for s in range(self.B):
+                if self.active[s]:
+                    self.pool.ensure_write_page(s, self._host_len[s])
+            paged_view = self.pool.paged_view(self._active_mask)
+            caches = self.pool.tree
+        elif self.paged is not None:
             caches = self.paged.merged()
-            if self.cfg.use_paged_decode:
-                # hand attention the engine's page layout so decode reads KV
-                # through ops.paged_decode_attention (hot/cold pools + page
-                # table) instead of the dense masked-merge view; boundaries
-                # are concrete ints (pool packing happens at trace time) and
-                # the layer-independent layout is built once per step here,
-                # so each attention layer only gathers its own pools
-                from repro.kernels.paged_decode import pool_layout
-                boundaries = [int(b) for b in
-                              jnp.asarray(self.paged.boundaries)]
-                paged_view = {
-                    "boundaries": boundaries,
-                    "page_tokens": self.page_tokens,
-                    "layout": pool_layout(boundaries,
-                                          self.max_seq // self.page_tokens,
-                                          self.page_tokens),
-                }
         elif self.tiered is not None:
             caches = self.tiered.merged()
         else:
@@ -197,7 +277,19 @@ class ContinuousBatcher:
             self.params, self.cfg, {"tokens": self.last_tok[:, None]},
             caches=caches, cache_index=self.lengths,
             decode=True, paged_view=paged_view)
-        if self.paged is not None:
+        if self.pool is not None:
+            self.pool.tree = new_caches
+            # advance each grown slot's own cold boundary by whole pages;
+            # twin-deduped shared pages advance the boundary with zero copy
+            for s in range(self.B):
+                if not self.active[s]:
+                    continue
+                target = self._slot_cold_target(s, self._host_len[s] + 1)
+                while self.ptable.cold_tokens(s) < target:
+                    if self.pool.demote_boundary(s):
+                        self.sim_migration_bytes += \
+                            self.page_tokens * self._row_bytes
+        elif self.paged is not None:
             self.paged.hot = new_caches
             # advance each active slot's own boundary: when the new length
             # pushes a page out of the slot's hot window, demote just that
@@ -205,7 +297,7 @@ class ContinuousBatcher:
             for s in range(self.B):
                 if not self.active[s]:
                     continue
-                new_len = int(self.lengths[s]) + 1
+                new_len = self._host_len[s] + 1
                 while self.ptable.n_pages[s] * self.page_tokens < new_len:
                     self.ptable.alloc(s, 0)        # decode grew into a new page
                 target = self._slot_cold_target(s, new_len)
@@ -221,8 +313,8 @@ class ContinuousBatcher:
             # inside the prefix (short slots) re-hosts only that slot's row,
             # not a re-split of the whole batch cache
             for s in range(self.B):
-                if self.active[s] and int(self.lengths[s]) < self.cold_len:
-                    pos = int(self.lengths[s])
+                if self.active[s] and self._host_len[s] < self.cold_len:
+                    pos = self._host_len[s]
                     self.tiered.cold = kvcache.to_host(kvcache.copy_slot_rows(
                         self.tiered.cold, new_caches, s, pos, pos + 1,
                         self.max_seq))
@@ -232,23 +324,25 @@ class ContinuousBatcher:
         tok = jnp.argmax(logits[:, -1, :self.cfg.vocab_size], axis=-1) \
             .astype(jnp.int32)
         self.last_tok = tok
-        self.lengths = self.lengths + jnp.asarray(
-            [1 if a else 0 for a in self.active], jnp.int32)
+        self.lengths = self.lengths + self._active_inc
+        tok_host = jax.device_get(tok)         # the decoded tokens themselves
+        was_active = list(self.active)
         for slot in range(self.B):
-            if not self.active[slot]:
+            if not was_active[slot]:
                 continue
-            self.outputs[slot].append(int(tok[slot]))
+            self._host_len[slot] += 1
+            self.outputs[slot].append(int(tok_host[slot]))
             self.budget[slot] -= 1
             if self.budget[slot] <= 0 or \
-                    int(tok[slot]) == self.scfg.eos_id:
+                    int(tok_host[slot]) == self.scfg.eos_id:
                 self.active[slot] = False
+        if self.active != was_active:
+            self._refresh_active()
         return True
 
     def run(self):
         results = []
         while self.queue or any(self.active):
-            done_before = [(i, o) for i, (a, o) in
-                           enumerate(zip(self.active, self.outputs)) if not a]
             if not self.step():
                 break
             for i in range(self.B):
@@ -261,7 +355,8 @@ class ContinuousBatcher:
 def serve_trace_for(cfg, requests: Sequence[tuple], *, slots: int,
                     params=None, block_tokens: int = 16,
                     recent_window: int = 32, history_period: int = 4,
-                    dtype_bytes: int = 2, layer_group: int = 1):
+                    dtype_bytes: int = 2, layer_group: int = 1,
+                    shared_prefix_tokens: int = 0):
     """Build the serving-phase trace (hmsim.ServeTrace) for this model and
     request stream — the profiling step of the decode-phase planner.  KV
     bytes/token come from the cache geometry; weight bytes and flops/token
@@ -269,7 +364,13 @@ def serve_trace_for(cfg, requests: Sequence[tuple], *, slots: int,
     from the config's dense-layer dimensions.  ``layer_group`` coarsens the
     object granularity to one KV block per *group* of layers (same total
     bytes, fewer objects) — the simulator cost scales with object count while
-    the byte geometry is what decides placement quality."""
+    the byte geometry is what decides placement quality.
+
+    Requests may be ``(prompt, decode)`` or ``(prompt, decode, prefix_id)``;
+    with ``shared_prefix_tokens > 0``, requests carrying the same prefix_id
+    share the KV blocks of their first ``shared_prefix_tokens`` prompt
+    tokens (tagged via ``KVObject.shared_key`` — the trace-level mirror of
+    the engine's physical page sharing)."""
     from repro.core import hmsim
     kv_tok = kvcache.kv_token_bytes(cfg, dtype_bytes)
     layers = max(1, -(-cfg.num_layers // max(1, layer_group)))
@@ -284,7 +385,8 @@ def serve_trace_for(cfg, requests: Sequence[tuple], *, slots: int,
         block_tokens=block_tokens,
         recent_window=recent_window, history_period=history_period,
         flops_per_token=2.0 * n_params,
-        weight_bytes=float(n_params) * dtype_bytes)
+        weight_bytes=float(n_params) * dtype_bytes,
+        shared_prefix_tokens=shared_prefix_tokens)
 
 
 def generate(params, cfg, prompts, num_tokens: int,

@@ -120,6 +120,82 @@ def test_schedule_bounded(step):
     assert 0.0 <= lr <= cfg.lr * 1.0001
 
 
+@st.composite
+def page_table_ops(draw, slots=4, pages_per_slot=4, max_ops=40):
+    """A random but always-legal op sequence over a PageTable: refill with a
+    fresh request, share a prefix from a donor, write (CoW when shared),
+    demote the boundary page, free."""
+    ops = []
+    for _ in range(draw(st.integers(1, max_ops))):
+        ops.append((draw(st.sampled_from(
+            ["refill", "share", "write", "demote", "free"])),
+            draw(st.integers(0, slots - 1)),
+            draw(st.integers(0, pages_per_slot - 1))))
+    return ops
+
+
+@given(page_table_ops())
+@settings(max_examples=40, deadline=None)
+def test_page_table_sharing_invariants(ops):
+    """Random alloc/share/write/demote/free: refcounts never negative, the
+    cold-prefix invariant and ``check()`` hold after every op, and every
+    slot's *logical* content (who originally wrote each page) survives
+    CoW, twin-deduped demotion, and refcounted frees."""
+    from repro.models.kvcache import PageTable
+    SLOTS, NP, PG = 4, 4, 8
+    pt = PageTable(SLOTS, NP, PG)
+    hot_data, cold_data = {}, {}        # phys -> content token
+    expect = [[None] * NP for _ in range(SLOTS)]   # logical content
+    stamp = 0
+
+    def store(s, i):
+        return cold_data if pt.tier[s][i] == 1 else hot_data
+
+    for op, s, i in ops:
+        stamp += 1
+        if op == "refill":
+            pt.free_slot(s)
+            expect[s] = [None] * NP
+            n = i + 1                            # 1..NP fresh pages
+            for j in range(n):
+                if not pt.hot_free:
+                    break
+                pt.alloc(s, 0)
+                hot_data[pt.table[s][j]] = ("w", s, stamp, j)
+                expect[s][j] = ("w", s, stamp, j)
+        elif op == "share":
+            donor = (s + 1) % SLOTS
+            if pt.n_pages[s] == 0 and pt.n_pages[donor] > 0:
+                n = min(i + 1, pt.n_pages[donor])
+                pt.share(s, donor, n)
+                expect[s] = list(expect[donor][:n]) + [None] * (NP - n)
+        elif op == "write" and i < pt.n_pages[s]:
+            r = pt.cow(s, i)
+            if r is not None:                    # engine copies page data
+                src, new, tier = r
+                d = cold_data if tier == 1 else hot_data
+                d[new] = d[src]
+            store(s, i)[pt.table[s][i]] = ("w", s, stamp, i)
+            expect[s][i] = ("w", s, stamp, i)
+        elif op == "demote":
+            b = pt.cold_pages(s)
+            if b < pt.n_pages[s] and pt.cold_free:
+                cold_phys, src, copied = pt.demote(s, b)
+                if copied:
+                    cold_data[cold_phys] = hot_data[src]
+        elif op == "free":
+            pt.free_slot(s)
+            expect[s] = [None] * NP
+        pt.check()                               # invariants after EVERY op
+        assert all(r >= 0 for r in pt.hot_ref + pt.cold_ref)
+        for sl in range(SLOTS):
+            assert pt.cold_pages(sl) * PG == pt.cold_tokens(sl)
+            for j in range(pt.n_pages[sl]):
+                if expect[sl][j] is not None:
+                    assert store(sl, j)[pt.table[sl][j]] == expect[sl][j], \
+                        (sl, j, "content lost through share/CoW/demote")
+
+
 @given(st.integers(1, 4), st.integers(1, 4),
        st.lists(st.sampled_from(["batch", "mlp", "vocab", None, "embed"]),
                 min_size=1, max_size=4))

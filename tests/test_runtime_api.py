@@ -10,7 +10,9 @@ import pytest
 
 from repro import runtime
 from repro.core.hardware import PAPER_HM, TPU_V5E
-from repro.runtime.synthetic import synthetic_profile, synthetic_serve_trace
+from repro.runtime.synthetic import (synthetic_profile,
+                                     synthetic_serve_trace,
+                                     synthetic_shared_prefix_trace)
 
 
 @pytest.fixture(scope="module")
@@ -21,6 +23,11 @@ def prof():
 @pytest.fixture(scope="module")
 def trace():
     return synthetic_serve_trace()
+
+
+@pytest.fixture(scope="module")
+def shared_trace():
+    return synthetic_shared_prefix_trace()
 
 
 # ------------------------------------------------------------- workloads ----
@@ -132,6 +139,28 @@ def test_policy_matrix_cross_workload(prof, trace):
         for name, r in res.items():
             assert r.time >= res["all_fast"].time * 0.999
             assert r.time <= res["all_slow"].time * 1.001
+
+
+def test_policy_matrix_shared_prefix_workload(shared_trace):
+    """Satellite: the N-tenants x one-system-prompt workload runs under
+    every registered policy on the unified surface, and the sharing-aware
+    accounting beats the matched unshared stream on the lifetime policy."""
+    unshared = synthetic_shared_prefix_trace(shared=False)
+    fast = 0.2 * unshared.peak_kv_bytes()
+    tokens = sum(shared_trace.active.values())
+    for name in runtime.list_policies():
+        if name == "base":
+            continue
+        r = runtime.simulate(shared_trace, TPU_V5E, fast, name)
+        assert r.policy == name and r.time > 0 and r.tokens == tokens
+    rs = runtime.simulate(shared_trace, TPU_V5E, fast, "sentinel")
+    ru = runtime.simulate(unshared, TPU_V5E, fast, "sentinel")
+    # shared pages' bytes count once: less migration, smaller physical peak
+    assert rs.bytes_s2f + rs.bytes_f2s < ru.bytes_s2f + ru.bytes_f2s
+    assert shared_trace.peak_kv_bytes() < unshared.peak_kv_bytes()
+    # and the plan's per-slot windows stay page-quantized on the shared trace
+    pl = runtime.plan(shared_trace, TPU_V5E, fast)
+    assert all(w % pl.page_tokens == 0 for w in pl.slot_hot_windows)
 
 
 def test_training_native_policy_on_serving_and_vice_versa(prof, trace):
