@@ -27,8 +27,12 @@ tokens and (b) re-hosting strictly fewer simulated migration bytes than the
 concat path.  ``--shared-prefix`` runs the N-tenants x one-system-prompt
 workload shared vs unshared — simulator sweep plus the pool engine with
 ``prefix_key`` sharing — and gates shared migration bytes AND peak pool
-bytes strictly below the unshared run at 20% fast memory.  ``--json``
-publishes every row (and the gate verdicts) for trend tracking across PRs.
+bytes strictly below the unshared run at 20% fast memory.  ``--tenants``
+runs the adversarial multi-tenant SLO mix and gates ``sentinel_slo`` at
+zero per-tenant quota violations (exactly where the tenant-blind
+``sentinel`` violates at least one tenant's guarantee) with aggregate
+migration bytes within 1.2x of the blind run.  ``--json`` publishes every
+row (and the gate verdicts) for trend tracking across PRs.
 """
 from __future__ import annotations
 
@@ -114,6 +118,43 @@ def run_shared_prefix(fracs=FRACS):
         if abs(frac - 0.2) < 1e-9:
             gate = (rs.bytes_s2f + rs.bytes_f2s,
                     ru.bytes_s2f + ru.bytes_f2s, peak_s, peak_u)
+    return rows, gate
+
+
+def run_tenants(fracs=FRACS):
+    """Multi-tenant SLO sweep on the unified surface: the adversarial
+    chatty-vs-bursty mix (``synthetic_multi_tenant_trace``) under the
+    tenant-blind ``sentinel`` vs the SLO-aware ``sentinel_slo``, both
+    measured against the same per-tenant guarantees.  Returns rows plus the
+    20% gate inputs: (blind violations, slo violations, blind migration
+    bytes, slo migration bytes)."""
+    from repro.runtime.synthetic import synthetic_multi_tenant_trace
+    wl = synthetic_multi_tenant_trace()
+    peak = wl.trace.peak_kv_bytes()
+    rows = [("bench_serve_tenants", "fast_frac", "policy", "tok_per_s",
+             "violations", "migration_mb", "tenant_fast_mb")]
+    gate = None
+    for frac in fracs:
+        fast = frac * peak
+        rb = runtime.simulate(wl, TPU_V5E, fast, "sentinel",
+                              tenant_quotas=wl.tenant_quotas)
+        rs = runtime.simulate(wl, TPU_V5E, fast, "sentinel_slo",
+                              tenant_quotas=wl.tenant_quotas,
+                              tenant_slack=wl.tenant_slack)
+        for pol, r in (("sentinel", rb), ("sentinel_slo", rs)):
+            # flat comma-free encoding: CSV rows keep a fixed column count
+            per_tenant = "|".join(
+                f"{k}:{round(v / 1e6, 3)}"
+                for k, v in sorted(r.tenant_fast_bytes.items()))
+            rows.append(("bench_serve_tenants", frac, pol,
+                         round(r.decode_throughput, 1),
+                         sum(r.tenant_violations.values()),
+                         round((r.bytes_s2f + r.bytes_f2s) / 1e6, 4),
+                         per_tenant))
+        if abs(frac - 0.2) < 1e-9:
+            gate = (sum(rb.tenant_violations.values()),
+                    sum(rs.tenant_violations.values()),
+                    rb.bytes_s2f + rb.bytes_f2s, rs.bytes_s2f + rs.bytes_f2s)
     return rows, gate
 
 
@@ -243,6 +284,11 @@ def main(argv=None):
                     help="also run the prefix-sharing sweep (simulator + "
                          "persistent-pool engine) and gate shared strictly "
                          "below unshared at 20%% fast memory")
+    ap.add_argument("--tenants", action="store_true",
+                    help="also run the multi-tenant SLO sweep and gate "
+                         "sentinel_slo at zero quota violations (where "
+                         "tenant-blind sentinel violates) with migration "
+                         "bytes within 1.2x, at 20%% fast memory")
     ap.add_argument("--json", default="",
                     help="write rows + verdicts to this JSON file")
     args = ap.parse_args(argv)
@@ -332,10 +378,38 @@ def main(argv=None):
               f"peak={peak_s / 1e3:.3f}/{peak_u / 1e3:.3f}kB,"
               f"{'OK' if e_ok else 'FAIL'}")
 
+    tenant_rows = []
+    if args.tenants:
+        trows, gate = run_tenants(fracs)
+        tenant_rows += trows
+        for r in trows:
+            print(",".join(map(str, r)))
+        if gate is None:
+            checks.append({"check": "tenant_slo@20%", "status": "SKIPPED",
+                           "reason": "requires --fracs containing 0.2"})
+            print("check,tenant_slo@20%,SKIPPED (needs frac 0.2)")
+        else:
+            v_blind, v_slo, mig_blind, mig_slo = gate
+            # the SLO claim: guarantees hold exactly where the tenant-blind
+            # policy breaks them, at bounded extra migration traffic
+            t_ok = v_slo == 0 and v_blind >= 1 and \
+                mig_slo <= 1.2 * mig_blind
+            ok &= t_ok
+            checks.append({"check": "tenant_slo@20%",
+                           "violations_blind": v_blind,
+                           "violations_slo": v_slo,
+                           "migration_blind_mb": round(mig_blind / 1e6, 4),
+                           "migration_slo_mb": round(mig_slo / 1e6, 4),
+                           "status": "OK" if t_ok else "FAIL"})
+            print(f"check,tenant_slo@20%,viol={v_blind}/{v_slo},"
+                  f"mig={mig_slo / 1e6:.4f}/{mig_blind / 1e6:.4f}MB,"
+                  f"{'OK' if t_ok else 'FAIL'}")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": [list(r) for r in
-                                rows + paged_rows + shared_rows],
+                                rows + paged_rows + shared_rows
+                                + tenant_rows],
                        "checks": checks}, f, indent=2)
         print(f"wrote {args.json}")
 

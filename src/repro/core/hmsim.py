@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core import warn_deprecated
 from repro.core.hardware import HWSpec
@@ -138,6 +138,7 @@ class KVObject:
     prefill: bool              # born during prefill (vs appended during decode)
     accesses: List[int] = field(default_factory=list)  # sorted decode steps
     shared_key: Optional[tuple] = None   # (prefix_id, layer, block) or None
+    tenant: Optional[str] = None         # owning tenant id (multi-tenant runs)
 
 
 @dataclass

@@ -27,8 +27,10 @@ thin wrappers over this package; see ``docs/RUNTIME_API.md`` for the
 contract and the migration guide.
 """
 from repro.runtime.objects import (AccessTimeline, DataObject, MemoryTier,
-                                   ServingWorkload, TrainingWorkload,
-                                   Workload, as_workload, peak_object_bytes,
+                                   MultiTenantWorkload, ServingWorkload,
+                                   Tenant, TrainingWorkload, Workload,
+                                   as_workload, merge_tenant_traces,
+                                   normalized_quotas, peak_object_bytes,
                                    tiers_from_hw)
 from repro.runtime.plan import (Candidate, PlacementPlan, ServeCandidate,
                                 enumerate_candidates, interval_stats,
@@ -41,12 +43,13 @@ from repro.runtime.policies import (PAGE_BYTES, POLICIES, PlacementPolicy,
                                     register_policy, simulate)
 
 __all__ = [
-    "AccessTimeline", "Candidate", "DataObject", "MemoryTier", "PAGE_BYTES",
-    "POLICIES", "PlacementPlan", "PlacementPolicy", "PlacementResult",
-    "ServeCandidate", "ServingWorkload", "TrainingWorkload", "Unit",
-    "Workload", "as_workload", "build_units", "enumerate_candidates",
-    "get_policy", "interval_stats", "list_policies", "mi_to_periods",
-    "peak_object_bytes", "plan", "plan_serving", "plan_training",
-    "register_policy", "serve_token_stats", "simulate", "slot_kv_weights",
-    "tiers_from_hw",
+    "AccessTimeline", "Candidate", "DataObject", "MemoryTier",
+    "MultiTenantWorkload", "PAGE_BYTES", "POLICIES", "PlacementPlan",
+    "PlacementPolicy", "PlacementResult", "ServeCandidate",
+    "ServingWorkload", "Tenant", "TrainingWorkload", "Unit", "Workload",
+    "as_workload", "build_units", "enumerate_candidates", "get_policy",
+    "interval_stats", "list_policies", "merge_tenant_traces",
+    "mi_to_periods", "normalized_quotas", "peak_object_bytes", "plan",
+    "plan_serving", "plan_training", "register_policy", "serve_token_stats",
+    "simulate", "slot_kv_weights", "tiers_from_hw",
 ]

@@ -27,7 +27,8 @@ benchmarkable on every workload.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+from typing import (Any, Dict, List, Optional, Protocol, Sequence,
+                    runtime_checkable)
 
 from repro.core.hardware import HWSpec
 
@@ -69,6 +70,7 @@ class DataObject:
     kind: str = "object"            # "weight" | "activation" | "kv" | ...
     meta: dict = field(default_factory=dict)
     shared_key: Optional[tuple] = None
+    tenant: Optional[str] = None    # owning tenant id (multi-tenant runs)
 
     @property
     def lifetime(self) -> int:
@@ -287,6 +289,154 @@ class ServingWorkload:
             extra_flops=eflops, extra_fast_bytes=ebytes, admits=tr.admits,
             births=tr.births, frees=tr.frees, reads=tr.reads,
             reserved_bytes=0.0, source=tr)
+        return self._tl
+
+
+@dataclass(frozen=True)
+class Tenant:
+    """One tenant of a multi-tenant serving deployment.
+
+    ``id``               stable string identity (JSON-safe: it keys the plan's
+                         per-tenant accounting dicts).
+    ``fast_quota_frac``  the tenant's *guaranteed* share of the fast-memory
+                         placement budget, as a fraction.  None means
+                         "unspecified": ``normalized_quotas`` grants such
+                         tenants an equal split of whatever fraction the
+                         explicit quotas leave unreserved.
+    ``slo_slack``        allowed decode slowdown versus all-fast (the
+                         decode-latency SLO, expressed as a ratio >= 1).  It
+                         orders *graceful degradation*: when guaranteed
+                         capacity must be reclaimed from borrowers, tenants
+                         with the loosest SLO give pages back first.
+    ``arrival``          decode step the tenant's request stream starts at —
+                         its arrival trace offset on the merged timeline.
+    """
+    id: str
+    fast_quota_frac: Optional[float] = None
+    slo_slack: float = 1.0
+    arrival: int = 0
+
+
+def normalized_quotas(tenants: Sequence[Tenant]) -> Dict[str, float]:
+    """Per-tenant guaranteed fast-memory fractions, summing to <= 1.
+
+    Explicit ``fast_quota_frac`` values are kept (rescaled only if they
+    oversubscribe); tenants with an unspecified quota (None) split the
+    leftover fraction evenly — every tenant ends up with a guarantee.
+    """
+    fixed = {t.id: float(t.fast_quota_frac) for t in tenants
+             if t.fast_quota_frac is not None}
+    total_fixed = sum(fixed.values())
+    if total_fixed > 1.0:
+        fixed = {k: v / total_fixed for k, v in fixed.items()}
+        total_fixed = 1.0
+    rest = [t.id for t in tenants if t.id not in fixed]
+    out = dict(fixed)
+    if rest:
+        share = max(0.0, 1.0 - total_fixed) / len(rest)
+        for tid in rest:
+            out[tid] = share
+    return out
+
+
+def merge_tenant_traces(tenants: Sequence[Tenant], traces: Sequence[Any],
+                        shared_prefix_ids: Sequence[Any] = ()):
+    """Interleave N tenants' ``hmsim.ServeTrace``s into ONE trace.
+
+    Each tenant's trace is shifted by its ``arrival`` offset and mapped onto
+    a disjoint slot range (the tenant's private continuous-batching slots —
+    one model instance serves everyone, so weight streaming is charged
+    once); every KV object is re-uid'ed and tagged with its tenant id.
+    ``shared_key``s are *namespaced per tenant* by default — two tenants'
+    traces built independently with the conventional ``prefix_id`` 0 hold
+    physically distinct prompts, and coalescing them would undercount
+    capacity and migration.  Prefix ids listed in ``shared_prefix_ids`` are
+    declared platform-wide (one system prompt serving every tenant) and
+    keep their keys verbatim, so they stay ONE physical allocation across
+    tenants.  Returns ``(merged_trace, slot_tenants)`` where
+    ``slot_tenants[s]`` names the tenant owning merged slot ``s``.
+    """
+    import copy
+
+    from repro.core.hmsim import ServeTrace
+    if len(tenants) != len(traces) or not tenants:
+        raise ValueError("merge_tenant_traces needs one trace per tenant")
+    t0 = traces[0]
+    for tr in traces[1:]:
+        same = all(getattr(tr, f) == getattr(t0, f) for f in
+                   ("num_layers", "block_tokens", "recent_window",
+                    "history_period", "kv_token_bytes", "weight_bytes",
+                    "flops_per_token"))
+        if not same:
+            raise ValueError("tenant traces must share one model geometry "
+                             "(layers/block/window/period/kv/weight/flops)")
+    merged = ServeTrace(
+        num_slots=sum(tr.num_slots for tr in traces),
+        num_layers=t0.num_layers, block_tokens=t0.block_tokens,
+        recent_window=t0.recent_window, history_period=t0.history_period,
+        kv_token_bytes=t0.kv_token_bytes, weight_bytes=t0.weight_bytes,
+        flops_per_token=t0.flops_per_token)
+    shared_ids = set(shared_prefix_ids)
+    slot_tenants: List[str] = []
+    uid = slot_off = 0
+    for tn, tr in zip(tenants, traces):
+        dt = max(0, int(tn.arrival))
+        slot_tenants += [tn.id] * tr.num_slots
+        remap: Dict[int, Any] = {}
+        for o in tr.objects:
+            c = copy.copy(o)
+            c.uid, uid = uid, uid + 1
+            c.slot = o.slot + slot_off
+            c.birth, c.death = o.birth + dt, o.death + dt
+            c.accesses = [a + dt for a in o.accesses]
+            c.tenant = tn.id
+            if c.shared_key is not None and \
+                    c.shared_key[0] not in shared_ids:
+                c.shared_key = (tn.id,) + tuple(c.shared_key)
+            remap[o.uid] = c
+            merged.objects.append(c)
+        for src, dst in ((tr.admits, merged.admits),
+                         (tr.births, merged.births),
+                         (tr.frees, merged.frees), (tr.reads, merged.reads)):
+            for t, objs in src.items():
+                dst.setdefault(t + dt, []).extend(remap[o.uid] for o in objs)
+        for t, n in tr.active.items():
+            merged.active[t + dt] = merged.active.get(t + dt, 0) + n
+        for t, n in tr.prefill_tokens.items():
+            merged.prefill_tokens[t + dt] = \
+                merged.prefill_tokens.get(t + dt, 0) + n
+        merged.num_steps = max(merged.num_steps, tr.num_steps + dt)
+        slot_off += tr.num_slots
+    return merged, slot_tenants
+
+
+class MultiTenantWorkload:
+    """Adapter: N tenants x N ``ServeTrace``s -> one unified timeline.
+
+    The third scenario on the unified surface: capacity pressure comes from
+    *competing* request streams instead of one model's phases.  The merged
+    trace is a plain ``ServeTrace`` whose objects carry tenant tags, so every
+    registered policy runs on it unchanged; the SLO-aware planner half reads
+    ``tenants`` / ``tenant_quotas`` / ``slot_tenants`` off this adapter to
+    enforce per-tenant shares.
+    """
+
+    kind = "serving"
+
+    def __init__(self, tenants: Sequence[Tenant], traces: Sequence[Any],
+                 shared_prefix_ids: Sequence[Any] = ()):
+        self.tenants = list(tenants)
+        if len({t.id for t in self.tenants}) != len(self.tenants):
+            raise ValueError("tenant ids must be unique")
+        self.trace, self.slot_tenants = merge_tenant_traces(
+            tenants, traces, shared_prefix_ids)
+        self.tenant_quotas = normalized_quotas(self.tenants)
+        self.tenant_slack = {t.id: float(t.slo_slack) for t in self.tenants}
+        self._tl: Optional[AccessTimeline] = None
+
+    def timeline(self) -> AccessTimeline:
+        if self._tl is None:
+            self._tl = ServingWorkload(self.trace).timeline()
         return self._tl
 
 

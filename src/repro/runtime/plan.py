@@ -93,6 +93,16 @@ class PlacementPlan:
     lookahead: int = 0
     slot_hot_windows: Optional[List[int]] = None
     page_tokens: int = 0
+    # ---- multi-tenant accounting (None on single-tenant plans) ----
+    # slot_tenants[s] names the tenant owning batch slot s (the engine admits
+    # a request only into its own tenant's slots); tenant_quotas are the
+    # guaranteed fast-share fractions the windows were sized under;
+    # tenant_fast_bytes / tenant_violations echo the winning simulation's
+    # per-tenant peaks and quota-violation counts (the SLO report card).
+    slot_tenants: Optional[List[str]] = None
+    tenant_quotas: Optional[Dict[str, float]] = None
+    tenant_fast_bytes: Optional[Dict[str, float]] = None
+    tenant_violations: Optional[Dict[str, int]] = None
     # ---- shared ----
     tiers: Optional[List[MemoryTier]] = None
     candidates: List[Any] = field(default_factory=list)
@@ -316,11 +326,36 @@ def serve_token_stats(trace, hw: HWSpec) -> tuple:
     return max(flops / hw.peak_flops, bw_bytes / hw.fast_bw), read_bytes
 
 
+def _tenant_knobs(wl, policy: str) -> dict:
+    """Per-tenant simulation knobs for a tenanted workload: quotas turn on
+    the violation accounting for any event-driven policy (quota-blind ones
+    are *measured* against the same guarantees ``sentinel_slo`` enforces);
+    the slack ordering only feeds the SLO policy."""
+    from repro.runtime.policies import PlacementPolicy
+    quotas = getattr(wl, "tenant_quotas", None)
+    cls = get_policy(policy)
+    if not quotas or \
+            cls.simulate.__func__ is not PlacementPolicy.simulate.__func__:
+        return {}
+    knobs = {"tenant_quotas": dict(sorted(quotas.items()))}
+    slack = getattr(wl, "tenant_slack", None)
+    if slack and policy == "sentinel_slo":
+        knobs["tenant_slack"] = dict(sorted(slack.items()))
+    return knobs
+
+
 def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
-                 policy: str = "sentinel",
+                 policy: Optional[str] = None,
                  lookaheads: Sequence[int] = (2, 4, 8, 16, 32)
                  ) -> PlacementPlan:
-    """Pick the hot window and prefetch look-ahead for serving-time tiering."""
+    """Pick the hot window and prefetch look-ahead for serving-time tiering.
+
+    On a multi-tenant workload (one exposing ``tenants`` — see
+    ``MultiTenantWorkload``) the default policy is ``sentinel_slo``, the
+    per-slot hot windows are sized inside each tenant's guaranteed share,
+    and the plan carries the per-tenant accounting
+    (``slot_tenants`` / ``tenant_quotas`` / ``tenant_fast_bytes`` /
+    ``tenant_violations``)."""
     wl = as_workload(workload)
     trace = getattr(wl, "trace", None)
     if trace is None:                        # protocol workloads / timelines
@@ -329,6 +364,9 @@ def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
         raise TypeError("plan_serving needs a workload whose timeline "
                         "sources a ServeTrace (window sizing reads the slot "
                         "geometry)")
+    tenants = getattr(wl, "tenants", None)
+    policy = policy or ("sentinel_slo" if tenants else "sentinel")
+    knobs = _tenant_knobs(wl, policy)
     rs = trace.rs_bytes()
     budget = max(0.0, fast_bytes - rs)
     kv_tok_all = trace.num_layers * trace.kv_token_bytes
@@ -358,7 +396,8 @@ def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
     pool = [c for c in cands if c.space_ok and c.time_ok] or cands
     best: Optional[ServeCandidate] = None
     for c in pool:
-        c.sim = simulate(wl, hw, fast_bytes, policy, lookahead=c.lookahead)
+        c.sim = simulate(wl, hw, fast_bytes, policy, lookahead=c.lookahead,
+                         **knobs)
         if best is None or c.sim.decode_throughput > best.sim.decode_throughput:
             best = c
 
@@ -368,13 +407,33 @@ def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
     blk = max(1, trace.block_tokens)
     budget_tokens = budget / kv_tok_all if kv_tok_all else 0.0
     weights = slot_kv_weights(trace)
-    slot_windows = [max(blk, (int(budget_tokens * w) // blk) * blk)
-                    for w in weights]
+    slot_tenants = getattr(wl, "slot_tenants", None)
+    quotas = getattr(wl, "tenant_quotas", None)
+    if tenants and slot_tenants and quotas:
+        # quota-partitioned sizing: each tenant's guaranteed token share is
+        # split over its own slots by their decode schedules, so one
+        # tenant's long-context burst can never widen another's windows away
+        tenant_w = {tn: sum(w for s, w in zip(slot_tenants, weights)
+                            if s == tn) or 1.0 for tn in set(slot_tenants)}
+        slot_windows = []
+        for s, (tn, w) in enumerate(zip(slot_tenants, weights)):
+            share = budget_tokens * quotas.get(tn, 0.0) * (w / tenant_w[tn])
+            slot_windows.append(max(blk, (int(share) // blk) * blk))
+    else:
+        slot_windows = [max(blk, (int(budget_tokens * w) // blk) * blk)
+                        for w in weights]
 
     return PlacementPlan(
         kind="serving", policy=policy, fast_bytes=fast_bytes, rs=rs,
         hot_window=best.hot_window, lookahead=best.lookahead,
         slot_hot_windows=slot_windows, page_tokens=blk,
+        slot_tenants=list(slot_tenants) if tenants and slot_tenants else None,
+        tenant_quotas=dict(sorted(quotas.items()))
+        if tenants and quotas else None,
+        tenant_fast_bytes=dict(best.sim.tenant_fast_bytes) or None
+        if tenants else None,
+        tenant_violations=dict(best.sim.tenant_violations)
+        if tenants and best.sim.tenant_violations else None,
         tiers=tiers_from_hw(hw, fast_bytes), candidates=cands, sim=best.sim)
 
 
@@ -386,15 +445,16 @@ def plan(workload, hw: HWSpec, fast_bytes: float, *,
          lookaheads: Sequence[int] = (2, 4, 8, 16, 32)) -> PlacementPlan:
     """THE entry point: profile -> plan for any workload.
 
-    ``workload`` is a training ``TraceProfile``, a serving ``ServeTrace``, or
-    a ``Workload`` adapter.  ``policy`` names a registered placement policy
-    (default: ``sentinel_mi`` for training, ``sentinel`` for serving); the
-    remaining knobs apply to the matching planner half only.
+    ``workload`` is a training ``TraceProfile``, a serving ``ServeTrace``, a
+    ``MultiTenantWorkload``, or a ``Workload`` adapter.  ``policy`` names a
+    registered placement policy (default: ``sentinel_mi`` for training,
+    ``sentinel`` for serving, ``sentinel_slo`` for multi-tenant serving);
+    the remaining knobs apply to the matching planner half only.
     """
     wl = as_workload(workload)
     if wl.kind == "training":
         return plan_training(wl, hw, fast_bytes,
                              policy=policy or "sentinel_mi",
                              max_mi=max_mi, sim_all=sim_all)
-    return plan_serving(wl, hw, fast_bytes, policy=policy or "sentinel",
+    return plan_serving(wl, hw, fast_bytes, policy=policy,
                         lookaheads=lookaheads)

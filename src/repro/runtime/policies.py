@@ -64,6 +64,12 @@ class PlacementResult:
     cases: Dict[int, int] = field(default_factory=lambda: {1: 0, 2: 0, 3: 0})
     mi: int = 0
     detail: dict = field(default_factory=dict)
+    # multi-tenant accounting (empty on untenanted runs): peak fast bytes a
+    # tenant's objects occupied, and quota-violation events per tenant (a
+    # within-guarantee read served from slow memory while another tenant
+    # squatted beyond its own share) — see docs/POLICIES.md#sentinel_slo
+    tenant_fast_bytes: Dict[str, float] = field(default_factory=dict)
+    tenant_violations: Dict[str, int] = field(default_factory=dict)
 
     @property
     def step_time(self) -> float:          # legacy training alias
@@ -149,18 +155,43 @@ class PlacementPolicy:
         self.in_fast: Dict[int, bool] = {}
         self.live: Dict[int, object] = {}
         self.fast_used = 0.0
+        self.peak_fast_used = 0.0
         self.migrations = 0
         self.bytes_s2f = 0.0
         self.bytes_f2s = 0.0
         self.slow_bytes_accessed = 0.0
+        self.stall_time = 0.0
         # shared-object groups (equal non-None ``shared_key``): one physical
         # allocation, one tier, one capacity/migration charge for the group
         self._shared: Dict[tuple, dict] = {}
+        # per-tenant accounting.  ``tenant_quotas`` (knob: tenant -> fraction
+        # of the placement budget) turns on the violation metric for ANY
+        # policy — quota-blind policies are measured against the same
+        # guarantees the SLO-aware policy enforces.
+        self.tenant_fast: Dict[str, float] = {}
+        self.tenant_fast_peak: Dict[str, float] = {}
+        self.tenant_violations: Dict[str, int] = {}
+        q = knobs.get("tenant_quotas") or {}
+        self.tenant_quotas: Dict[str, float] = \
+            {str(k): float(v) * self.fast_bytes for k, v in q.items()}
 
     # ------------------------------------------------------------- helpers --
     @staticmethod
     def _group_key(o):
         return getattr(o, "shared_key", None)
+
+    @staticmethod
+    def _tenant_of(o) -> Optional[str]:
+        tn = getattr(o, "tenant", None)
+        return None if tn is None else str(tn)
+
+    def _tenant_add(self, tn: Optional[str], b: float) -> None:
+        if tn is None:
+            return
+        v = self.tenant_fast.get(tn, 0.0) + b
+        self.tenant_fast[tn] = v
+        if v > self.tenant_fast_peak.get(tn, 0.0):
+            self.tenant_fast_peak[tn] = v
 
     def _group(self, o):
         """Live shared group of ``o``, or None (unshared / first member)."""
@@ -184,10 +215,14 @@ class PlacementPolicy:
                 g["uids"].add(o.uid)
                 self.in_fast[o.uid] = g["fast"]
                 return
-            self._shared[k] = {"fast": fast, "uids": {o.uid}}
+            # the group's one capacity charge goes to the tenant that first
+            # materialized the physical pages
+            self._shared[k] = {"fast": fast, "uids": {o.uid},
+                               "tn": self._tenant_of(o)}
         self.in_fast[o.uid] = fast
         if fast:
             self.fast_used += o.bytes
+            self._tenant_add(self._tenant_of(o), o.bytes)
 
     def _demote(self, o):
         g = self._group(o)
@@ -197,12 +232,14 @@ class PlacementPolicy:
                 for uid in g["uids"]:
                     self.in_fast[uid] = False
                 self.fast_used -= o.bytes
+                self._tenant_add(g.get("tn"), -o.bytes)
                 self.migrations += 1
                 self.bytes_f2s += o.bytes
             return
         if self.in_fast.get(o.uid):
             self.in_fast[o.uid] = False
             self.fast_used -= o.bytes
+            self._tenant_add(self._tenant_of(o), -o.bytes)
             self.migrations += 1
             self.bytes_f2s += o.bytes
 
@@ -214,12 +251,14 @@ class PlacementPolicy:
                 for uid in g["uids"]:
                     self.in_fast[uid] = True
                 self.fast_used += o.bytes
+                self._tenant_add(g.get("tn"), o.bytes)
                 self.migrations += 1
                 self.bytes_s2f += o.bytes
             return
         if not self.in_fast.get(o.uid):
             self.in_fast[o.uid] = True
             self.fast_used += o.bytes
+            self._tenant_add(self._tenant_of(o), o.bytes)
             self.migrations += 1
             self.bytes_s2f += o.bytes
 
@@ -238,9 +277,11 @@ class PlacementPolicy:
                     self._shared.pop(k, None)
                     if g["fast"]:
                         self.fast_used -= o.bytes
+                        self._tenant_add(g.get("tn"), -o.bytes)
                 continue
             if fast:
                 self.fast_used -= o.bytes
+                self._tenant_add(self._tenant_of(o), -o.bytes)
 
     def on_admit(self, t: int, objs: Iterable) -> None:
         for o in objs:
@@ -259,8 +300,25 @@ class PlacementPolicy:
                 bf += o.bytes
             else:
                 bs += o.bytes
+                self._note_slow_read(o)
         self.slow_bytes_accessed += bs
         return bf, bs
+
+    def _note_slow_read(self, o) -> None:
+        """SLO accounting: a slow read is a quota *violation* when the
+        reading tenant was still inside its guaranteed fast share (it was
+        entitled to the capacity) while some other tenant occupied fast
+        memory beyond its own share.  Quotas summing to <= 1 make the two
+        conditions jointly imply a squatter denied the entitled tenant."""
+        if not self.tenant_quotas:
+            return
+        tn = self._tenant_of(o)
+        q = self.tenant_quotas.get(tn)
+        if q is None or self.tenant_fast.get(tn, 0.0) + o.bytes > q:
+            return                         # no guarantee, or demand beyond it
+        if any(self.tenant_fast.get(j, 0.0) > qj + 1e-6
+               for j, qj in self.tenant_quotas.items() if j != tn):
+            self.tenant_violations[tn] = self.tenant_violations.get(tn, 0) + 1
 
     def migrate(self, t: int, budget_bytes: float) -> int:
         return 0
@@ -281,24 +339,29 @@ class PlacementPolicy:
             pol.on_free(t, tl.frees.get(t, ()))
             pol.on_admit(t, tl.admits.get(t, ()))
             pol.on_birth(t, tl.births.get(t, ()))
+            pol.peak_fast_used = max(pol.peak_fast_used, pol.fast_used)
             bf, bs = pol.on_reads(t, tl.reads.get(t, ()))
             fixed = tl.fixed_fast_bytes[t]
             t_step = max(tl.flops[t] / hw.peak_flops,
                          (bf + fixed) / hw.fast_bw + bs / hw.slow_bw)
             t_step += tl.extra_time(t, hw)
             migs = pol.migrate(t, t_step * hw.mig_bw)
+            pol.peak_fast_used = max(pol.peak_fast_used, pol.fast_used)
             total += t_step + migs * hw.mig_overhead
             compute_lb += max(tl.flops[t] / hw.peak_flops,
                               (bf + bs + fixed) / hw.fast_bw)
             compute_lb += tl.extra_time(t, hw)
             tokens += tl.tokens[t]
+        total += pol.stall_time          # SLO repairs stall the decode stream
         return PlacementResult(
             policy=cls.name, time=total, compute_time=compute_lb,
             tokens=tokens, migrations=pol.migrations, bytes_s2f=pol.bytes_s2f,
-            bytes_f2s=pol.bytes_f2s,
+            bytes_f2s=pol.bytes_f2s, stall_time=pol.stall_time,
             slow_bytes_accessed=pol.slow_bytes_accessed,
+            tenant_fast_bytes=dict(sorted(pol.tenant_fast_peak.items())),
+            tenant_violations=dict(sorted(pol.tenant_violations.items())),
             detail={"fast_bytes": fast_bytes, "peak_kv": tl.peak_bytes(),
-                    **knobs})
+                    "peak_fast_used": pol.peak_fast_used, **knobs})
 
 
 @register_policy("prefer_fast")
@@ -505,14 +568,11 @@ class SentinelLifetime(PlacementPolicy):
 
     on_birth = on_admit
 
-    def migrate(self, t, budget_bytes):
-        migs0 = self.migrations
-        live = list(self.live.values())
-        scored = [(self._score(o, t), o) for o in live]
-        # desired fast set: greedy by score; incumbents win ties so
-        # equal-rate history objects never ping-pong between tiers
-        scored.sort(key=lambda p: (-p[0], not self.in_fast.get(p[1].uid),
-                                   p[1].uid))
+    def _desired_fast_set(self, t, scored) -> set:
+        """Greedy-by-score fast set (Belady with known schedules); shared
+        groups charge capacity once.  ``sentinel_slo`` overrides this with a
+        quota-partitioned construction — the promote/demote machinery in
+        ``migrate`` is shared."""
         target = set()
         used = 0.0
         seen_groups = set()
@@ -526,6 +586,17 @@ class SentinelLifetime(PlacementPolicy):
                 used += eff
                 if k is not None:
                     seen_groups.add(k)
+        return target
+
+    def migrate(self, t, budget_bytes):
+        migs0 = self.migrations
+        live = list(self.live.values())
+        scored = [(self._score(o, t), o) for o in live]
+        # desired fast set: greedy by score; incumbents win ties so
+        # equal-rate history objects never ping-pong between tiers
+        scored.sort(key=lambda p: (-p[0], not self.in_fast.get(p[1].uid),
+                                   p[1].uid))
+        target = self._desired_fast_set(t, scored)
         promotes = [o for sc, o in scored
                     if o.uid in target and not self.in_fast.get(o.uid)]
         promotes.sort(key=lambda o: self._next_access(o, t) or 10 ** 12)
@@ -555,6 +626,163 @@ class SentinelLifetime(PlacementPolicy):
             self._promote(o)
             budget_bytes -= o.bytes
         return self.migrations - migs0
+
+
+@register_policy("sentinel_slo")
+class SentinelSLO(SentinelLifetime):
+    """SLO-aware multi-tenant variant of ``sentinel``.
+
+    Same lifetime knowledge (Belady on the known access schedule), but the
+    fast tier is partitioned by per-tenant *guarantees*:
+
+      quotas         ``tenant_quotas`` (tenant -> fraction of the placement
+                     budget, summing to <= 1) are each tenant's guaranteed
+                     share.  Default: equal shares over the tenants tagged in
+                     the timeline.
+      work-conserving borrowing
+                     capacity a tenant leaves idle is lent out — the desired
+                     fast set is built in two passes, first each tenant's
+                     best objects within its own quota, then global Belady
+                     over whatever room remains.
+      graceful degradation
+                     borrowed capacity is revocable: when a within-guarantee
+                     placement needs room, borrowers are demoted first,
+                     ordered by SLO slack (``tenant_slack``; loosest SLO
+                     degrades first), never a tenant inside its own share.
+      repair-on-read as a backstop, an entitled read about to hit slow
+                     memory is promoted first (the migration stalls the
+                     stream — charged to ``stall_time``), so a tenant inside
+                     its guarantee never reads from slow memory while a
+                     squatter holds its share: ``tenant_violations`` is zero
+                     by construction whenever the quotas sum to <= 1.
+    """
+
+    def __init__(self, timeline, hw, fast_bytes, *, tenant_quotas=None,
+                 tenant_slack=None, lookahead: int = 8, **knobs):
+        if tenant_quotas is None:
+            tenants = sorted({str(o.tenant) for o in timeline.objects
+                              if getattr(o, "tenant", None) is not None})
+            tenant_quotas = {tn: 1.0 / len(tenants) for tn in tenants} \
+                if tenants else {}
+        super().__init__(timeline, hw, fast_bytes, lookahead=lookahead,
+                         tenant_quotas=tenant_quotas, **knobs)
+        self.tenant_slack: Dict[str, float] = \
+            {str(k): float(v) for k, v in (tenant_slack or {}).items()}
+
+    # --------------------------------------------------------- quota state --
+    def _quota_of(self, tn: Optional[str]) -> Optional[float]:
+        return None if tn is None else self.tenant_quotas.get(tn)
+
+    def _within_quota(self, o) -> bool:
+        """Would placing ``o`` fast keep its tenant inside its guarantee?"""
+        tn = self._tenant_of(o)
+        q = self._quota_of(tn)
+        return q is not None and \
+            self.tenant_fast.get(tn, 0.0) + self._charge_bytes(o) <= q
+
+    def _is_borrower(self, o) -> bool:
+        """Fast-resident beyond (or outside) any guarantee: revocable."""
+        g = self._group(o)
+        tn = g.get("tn") if g is not None else self._tenant_of(o)
+        q = self._quota_of(tn)
+        return q is None or self.tenant_fast.get(tn, 0.0) > q + 1e-6
+
+    def _slack_of(self, o) -> float:
+        g = self._group(o)
+        tn = g.get("tn") if g is not None else self._tenant_of(o)
+        if tn is None:
+            return float("inf")            # untenanted: degrades first
+        return self.tenant_slack.get(tn, 1.0)
+
+    def _reclaim_for(self, need: float, t: int, protect: Optional[str]):
+        """Make room for a within-guarantee placement: demote borrowers
+        first (loosest SLO first, then farthest next access), falling back
+        to plain Belady only if no borrower remains.  When every tenant is
+        inside its quota and the quotas sum to <= 1, the borrower pass alone
+        always finds the room."""
+        if self.fast_used + need <= self.fast_bytes:
+            return
+        victims = [o for o in self.live.values() if self.in_fast.get(o.uid)
+                   and self._tenant_of(o) != protect]
+        victims.sort(key=lambda o: (
+            -self._slack_of(o),
+            -(self._group_next_access(o, t) or 10 ** 12), o.uid))
+        for v in victims:
+            if self.fast_used + need <= self.fast_bytes:
+                return
+            if self._is_borrower(v):
+                self._demote(v)
+        self._evict_for(need, t)
+
+    # ----------------------------------------------------------- placement --
+    def on_admit(self, t, objs):
+        for o in objs:
+            if self._group(o) is not None:
+                self._place(o, True)       # pages already resident: free ride
+                continue
+            within = self._within_quota(o)
+            if not within and self._score(o, t - 1) == 0:
+                self._place(o, False)      # cold and beyond guarantee
+                continue
+            if within:
+                self._reclaim_for(o.bytes, t, self._tenant_of(o))
+            else:
+                self._evict_for(o.bytes, t)
+            self._place(o, self.fast_used + o.bytes <= self.fast_bytes)
+
+    on_birth = on_admit
+
+    def on_reads(self, t, objs):
+        # repair-on-read: an entitled access about to hit slow memory pulls
+        # the object in first, reclaiming lent capacity; the copy is on the
+        # critical path (the paper's Case-3 stall, per object)
+        for o in objs:
+            if self.in_fast.get(o.uid, False) or not self._within_quota(o):
+                continue
+            self._reclaim_for(o.bytes, t, self._tenant_of(o))
+            if self.fast_used + self._charge_bytes(o) <= self.fast_bytes:
+                self._promote(o)
+                self.stall_time += o.bytes / self.hw.mig_bw
+        return super().on_reads(t, objs)
+
+    # ----------------------------------------------------------- migration --
+    def _desired_fast_set(self, t, scored) -> set:
+        """Two-pass target: guaranteed shares first (each tenant's best
+        objects within its own quota), then work-conserving borrowing of
+        whatever capacity is left, by global score order."""
+        target = set()
+        used = 0.0
+        tenant_used: Dict[str, float] = {}
+        seen_groups = set()
+        for sc, o in scored:               # pass 1: inside the guarantees
+            if sc <= 0:
+                break
+            tn = self._tenant_of(o)
+            q = self._quota_of(tn)
+            if q is None:
+                continue
+            k = self._group_key(o)
+            eff = o.bytes if k is None or k not in seen_groups else 0.0
+            if tenant_used.get(tn, 0.0) + eff <= q and \
+                    used + eff <= self.fast_bytes:
+                target.add(o.uid)
+                used += eff
+                tenant_used[tn] = tenant_used.get(tn, 0.0) + eff
+                if k is not None:
+                    seen_groups.add(k)
+        for sc, o in scored:               # pass 2: borrow the idle rest
+            if sc <= 0:
+                break
+            if o.uid in target:
+                continue
+            k = self._group_key(o)
+            eff = o.bytes if k is None or k not in seen_groups else 0.0
+            if used + eff <= self.fast_bytes:
+                target.add(o.uid)
+                used += eff
+                if k is not None:
+                    seen_groups.add(k)
+        return target
 
 
 # ===================================================== interval/static units ==
@@ -736,11 +964,18 @@ class SentinelMI(PlacementPolicy):
         # initial prefetch: units needed by interval 0, by first-use order
         first = [u for u in movable if any(a < mi for a in u.accesses)
                  and u.uid not in slow_resident]
+        peak_fast = 0.0
+
+        def bump(b: float) -> None:
+            nonlocal fast_used, peak_fast
+            fast_used += b
+            peak_fast = max(peak_fast, fast_used)
+
         first.sort(key=lambda u: u.accesses[0])
         for u in first:
             if fast_used + u.bytes <= budget:
                 in_fast[u.uid] = True
-                fast_used += u.bytes
+                bump(u.bytes)
                 res.migrations += 1
                 res.bytes_s2f += u.bytes
 
@@ -770,7 +1005,7 @@ class SentinelMI(PlacementPolicy):
                                                               nxt_hi)
                         if fast_used + u.bytes <= budget:
                             in_fast[u.uid] = True
-                            fast_used += u.bytes
+                            bump(u.bytes)
                         else:                    # truly no room: spills slow
                             slow_resident.add(u.uid)
                             bytes_slow += u.bytes
@@ -832,7 +1067,7 @@ class SentinelMI(PlacementPolicy):
                 if u.bytes > capacity:
                     break
                 capacity -= u.bytes
-                fast_used += u.bytes
+                bump(u.bytes)
                 in_fast[u.uid] = True
                 res.migrations += 1
                 res.bytes_s2f += u.bytes
@@ -857,7 +1092,7 @@ class SentinelMI(PlacementPolicy):
                     for u in list(pending):
                         if fast_used + u.bytes <= budget:
                             stall += u.bytes / hw.mig_bw
-                            fast_used += u.bytes
+                            bump(u.bytes)
                             in_fast[u.uid] = True
                             res.migrations += 1
                             res.bytes_s2f += u.bytes
@@ -867,7 +1102,8 @@ class SentinelMI(PlacementPolicy):
                 # else: leave in slow, pay access penalty next interval
 
         res.time = total
-        res.detail = {"fast_budget": budget, "rs": rs}
+        res.detail = {"fast_budget": budget, "rs": rs,
+                      "peak_fast_used": peak_fast}
         return res
 
 
@@ -956,6 +1192,8 @@ class _CachingDaemon(PlacementPolicy):
                 if fast_used + u.bytes <= fast_bytes and bw_budget > 0:
                     in_fast[uid] = True
                     fast_used += u.bytes
+                    res.detail["peak_fast_used"] = max(
+                        res.detail.get("peak_fast_used", 0.0), fast_used)
                     inactive[uid] = True
                     res.migrations += 1
                     res.bytes_s2f += u.bytes

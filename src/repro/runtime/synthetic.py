@@ -116,3 +116,56 @@ def synthetic_shared_prefix_trace(num_tenants: int = 12, num_slots: int = 4,
                              flops_per_token=flops_per_token,
                              shared_prefix_tokens=system_tokens
                              if shared else 0)
+
+
+def synthetic_multi_tenant_trace(chatty_requests: int = 10,
+                                 bursty_requests: int = 4,
+                                 slots_per_tenant: int = 2,
+                                 chatty_quota: float = 0.45,
+                                 bursty_quota: float = 0.55,
+                                 system_tokens: int = 0,
+                                 num_layers: int = 8,
+                                 kv_token_bytes: float = 4096,
+                                 weight_bytes: float = 50e6,
+                                 flops_per_token: float = 2e9):
+    """The adversarial multi-tenant serving mix: two tenants with opposite
+    shapes competing for one fast tier, as a ``MultiTenantWorkload``.
+
+      chatty   many small-context conversational turns (short prompts, short
+               decodes) under a tight decode-latency SLO — its working set
+               is far below its guaranteed share, but every block of it is
+               latency-critical.
+      bursty   few long-context requests (analytics-style prompts, long
+               decodes) under a loose SLO — its KV floods any capacity-
+               limited fast tier, which is exactly what starves the chatty
+               tenant under tenant-blind placement.
+
+    At 20% fast memory a quota-blind lifetime policy packs fast memory with
+    the bursty tenant's high-reuse blocks past its share and serves part of
+    the chatty tenant's entitled reads from slow memory (quota violations);
+    ``sentinel_slo`` keeps the guarantee and degrades the bursty tenant
+    instead.  ``system_tokens > 0`` additionally gives every request of both
+    tenants one shared system prompt (``prefix_id`` 0 — one physical
+    allocation platform-wide).  Deterministic: no RNG anywhere.
+    """
+    from repro.core.hmsim import build_serve_trace
+    from repro.runtime.objects import MultiTenantWorkload, Tenant
+    geometry = dict(num_slots=slots_per_tenant, num_layers=num_layers,
+                    kv_token_bytes=kv_token_bytes, weight_bytes=weight_bytes,
+                    flops_per_token=flops_per_token,
+                    shared_prefix_tokens=system_tokens)
+    chatty_reqs = [(system_tokens + 16 + (i * 7) % 13,
+                    12 + (i * 5) % 9, 0)
+                   for i in range(chatty_requests)]
+    bursty_reqs = [(system_tokens + 224 + (i * 31) % 49,
+                    40 + (i * 13) % 17, 0)
+                   for i in range(bursty_requests)]
+    tenants = [Tenant("chatty", fast_quota_frac=chatty_quota,
+                      slo_slack=1.05, arrival=0),
+               Tenant("bursty", fast_quota_frac=bursty_quota,
+                      slo_slack=2.0, arrival=4)]
+    traces = [build_serve_trace(chatty_reqs, **geometry),
+              build_serve_trace(bursty_reqs, **geometry)]
+    # prefix_id 0 is the platform-wide system prompt: the one key that is
+    # genuinely shared across tenants (everything else stays namespaced)
+    return MultiTenantWorkload(tenants, traces, shared_prefix_ids=(0,))

@@ -88,13 +88,29 @@ class ContinuousBatcher:
 
     def __init__(self, params, cfg, batch_slots: int, max_seq: int,
                  scfg: Optional[ServeConfig] = None, plan=None,
-                 paged: bool = False):
+                 paged: bool = False, slot_tenants=None):
         if paged and plan is None:
             raise ValueError("paged=True requires a ServePlan (plan=...)")
         self.params, self.cfg = params, cfg
         self.B, self.max_seq = batch_slots, max_seq
         self.scfg = scfg or ServeConfig(max_seq=max_seq)
         self.plan = plan
+        # multi-tenant plans partition the batch slots: a request tagged with
+        # a tenant is only admitted into that tenant's slots, so one bursty
+        # tenant can never occupy the whole batch.  ``slot_tenants=`` lets an
+        # un-planned (all-HBM) reference run replay the same admission
+        # schedule, keeping logits comparable slot for slot.
+        if slot_tenants is None and plan is not None:
+            slot_tenants = getattr(plan, "slot_tenants", None)
+        self.slot_tenants = list(slot_tenants) if slot_tenants else None
+        if self.slot_tenants and len(self.slot_tenants) != batch_slots:
+            # silent wrap-around would mis-assign tenant ownership — the
+            # plan must have been built for this batch geometry
+            raise ValueError(
+                f"slot_tenants has {len(self.slot_tenants)} entries for "
+                f"{batch_slots} batch slots (plan/batch geometry mismatch)")
+        self.tenant_hot_peak: dict = {}        # tenant -> peak hot pool bytes
+        self._tenant_note_version = -1         # last-sampled table version
         self.cold_len = plan.cold_len(max_seq) if plan is not None else 0
         dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         dt_bytes = 2 if dt == jnp.bfloat16 else 4
@@ -140,12 +156,59 @@ class ContinuousBatcher:
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, cfg, b, max_seq=max_seq))
 
-    def submit(self, tokens, num_tokens: int, prefix_key=None):
+    def submit(self, tokens, num_tokens: int, prefix_key=None, tenant=None):
         """Queue a request.  ``prefix_key`` (hashable) marks requests that
         share a common prompt prefix (e.g. one system prompt per tenant):
         on the pools layout their common full pages map to the same physical
-        pages, refcounted, with copy-on-write past the fork point."""
-        self.queue.append((tokens, num_tokens, prefix_key))
+        pages, refcounted, with copy-on-write past the fork point.
+        ``tenant`` restricts admission to the tenant's own slots when the
+        plan carries ``slot_tenants`` (untagged requests admit anywhere)."""
+        if tenant is not None and self.slot_tenants and \
+                tenant not in self.slot_tenants:
+            # an unknown tag would never match a slot: the request would sit
+            # in the queue forever and run() would drop it silently
+            raise ValueError(f"tenant {tenant!r} owns no batch slot "
+                             f"(slot_tenants={self.slot_tenants})")
+        self.queue.append((tokens, num_tokens, prefix_key, tenant))
+
+    def _slot_tenant(self, slot: int):
+        return self.slot_tenants[slot] if self.slot_tenants else None
+
+    def _next_for_slot(self, slot: int) -> Optional[int]:
+        """Queue index of the first request admissible to ``slot`` (FIFO
+        within each tenant; untagged requests match any slot)."""
+        tn = self._slot_tenant(slot)
+        for i, item in enumerate(self.queue):
+            if tn is None or item[3] is None or item[3] == tn:
+                return i
+        return None
+
+    def _note_tenant_pages(self):
+        """Record each tenant's current hot-pool footprint (distinct
+        physical hot pages across its slots — shared pages count once) and
+        fold it into the per-tenant peak counters the SLO report reads.
+        Event-driven like the rest of the pools bookkeeping: the footprint
+        can only change when the page table mutates, so a steady-state step
+        is a single version compare."""
+        if not self.slot_tenants or self.ptable is None:
+            return
+        if self.ptable.version == self._tenant_note_version:
+            return                         # no layout event since last sample
+        self._tenant_note_version = self.ptable.version
+        per: dict = {}
+        for s in range(self.B):
+            tn = self._slot_tenant(s)
+            if tn is None:
+                continue
+            per.setdefault(tn, set()).update(
+                self.ptable.table[s][i]
+                for i in range(self.ptable.n_pages[s])
+                if self.ptable.tier[s][i] == 0)
+        page_bytes = self.page_tokens * self._row_bytes
+        for tn, pages in per.items():
+            v = len(pages) * page_bytes
+            if v > self.tenant_hot_peak.get(tn, 0):
+                self.tenant_hot_peak[tn] = v
 
     def _refresh_active(self):
         """Re-derive the cached device-side active mask (event-driven: only
@@ -204,7 +267,10 @@ class ContinuousBatcher:
         for slot in range(self.B):
             if self.active[slot] or not self.queue:
                 continue
-            tokens, budget, prefix_key = self.queue.pop(0)
+            qi = self._next_for_slot(slot)
+            if qi is None:
+                continue                   # no queued request for this tenant
+            tokens, budget, prefix_key, tenant = self.queue.pop(qi)
             S = tokens.shape[-1]
             last, fresh = self._prefill(self.params,
                                         {"tokens": tokens[None]})
@@ -243,6 +309,7 @@ class ContinuousBatcher:
             self.outputs[slot] = [int(self.last_tok[slot])]
             self.budget[slot] -= 1
             self._refresh_active()
+            self._note_tenant_pages()
 
     def step(self):
         """One lockstep decode step across all active slots — each slot writes
@@ -289,6 +356,7 @@ class ContinuousBatcher:
                     if self.pool.demote_boundary(s):
                         self.sim_migration_bytes += \
                             self.page_tokens * self._row_bytes
+            self._note_tenant_pages()
         elif self.paged is not None:
             self.paged.hot = new_caches
             # advance each active slot's own boundary: when the new length
@@ -305,6 +373,7 @@ class ContinuousBatcher:
                 while self.ptable.cold_tokens(s) < target:
                     self.ptable.demote(s, self.ptable.cold_pages(s))
                 self.sim_migration_bytes += moved * self._row_bytes
+            self._note_tenant_pages()
         elif self.tiered is not None:
             _, hot = kvcache.split_seq_cache(new_caches, self.max_seq,
                                              self.cold_len)
@@ -350,6 +419,99 @@ class ContinuousBatcher:
                     results.append(self.outputs[i])
                     self.outputs[i] = []
         return results
+
+
+def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
+                          max_seq: int, page_tokens: int, row_bytes: float,
+                          slot_tenants=None) -> dict:
+    """Pure-Python replay of the pools-layout batcher's bookkeeping: given
+    the request stream ``[(prompt_tokens, decode_tokens[, tenant]), ...]``
+    and a plan, predict ``sim_migration_bytes``, the pool's ``page_copies``
+    / ``admit_page_writes`` counters, and the per-tenant hot-pool byte peaks
+    — *exactly* (integer-for-integer) what a ``ContinuousBatcher``
+    (``paged=True`` + ``use_paged_decode``, no prefix sharing) will report
+    on the same deterministic stream.  This is the engine/simulator
+    agreement contract: the simulator predicts, the engine counts, the two
+    never drift (``tests/test_multi_tenant.py`` pins it).
+
+    The replay mirrors the engine's event order: per step, admission into
+    free slots (FIFO within each tenant), write-page growth for every active
+    slot, then per-slot cold-boundary demotions toward the plan's target;
+    peaks are sampled after each admission and after each step's demotions,
+    the same points the engine samples."""
+    pg = page_tokens
+    if slot_tenants is None and plan is not None:
+        slot_tenants = getattr(plan, "slot_tenants", None)
+    if slot_tenants and len(slot_tenants) != slots:
+        raise ValueError(f"slot_tenants has {len(slot_tenants)} entries for "
+                         f"{slots} slots (plan/batch geometry mismatch)")
+    queue = [(int(r[0]), int(r[1]), r[2] if len(r) > 2 else None)
+             for r in requests]
+    active = [False] * slots
+    host_len = [0] * slots
+    budget = [0] * slots
+    n_pages = [0] * slots
+    cold = [0] * slots
+    mig = 0.0
+    copies = admit_writes = 0
+    peaks: dict = {}
+
+    def slot_tn(s):
+        return slot_tenants[s] if slot_tenants else None
+
+    def note():
+        if not slot_tenants:
+            return
+        per: dict = {}
+        for s in range(slots):
+            tn = slot_tn(s)
+            if tn is not None:
+                per[tn] = per.get(tn, 0) + (n_pages[s] - cold[s])
+        for tn, hot in per.items():
+            v = hot * pg * row_bytes
+            if v > peaks.get(tn, 0):
+                peaks[tn] = v
+
+    def demote_to(s, target):
+        nonlocal mig, copies
+        while cold[s] * pg < target:
+            cold[s] += 1
+            mig += pg * row_bytes
+            copies += 1
+
+    while queue or any(active):
+        for s in range(slots):             # ContinuousBatcher._admit
+            if active[s] or not queue:
+                continue
+            tn_s = slot_tn(s)
+            qi = next((i for i, (_, _, tn) in enumerate(queue)
+                       if tn_s is None or tn is None or tn == tn_s), None)
+            if qi is None:
+                continue
+            p, d, _ = queue.pop(qi)
+            n_pages[s] = -(-p // pg)
+            cold[s] = 0
+            admit_writes += n_pages[s]
+            demote_to(s, plan.cold_len_slot(s, p, pg))
+            host_len[s], active[s], budget[s] = p, True, d - 1
+            note()
+        if not any(active):
+            break
+        for s in range(slots):             # pool.ensure_write_page
+            if active[s] and n_pages[s] * pg < host_len[s] + 1:
+                n_pages[s] += 1
+        for s in range(slots):             # post-forward boundary advance
+            if active[s]:
+                demote_to(s, plan.cold_len_slot(s, host_len[s] + 1, pg))
+        note()
+        for s in range(slots):
+            if active[s]:
+                host_len[s] += 1
+                budget[s] -= 1
+                if budget[s] <= 0:
+                    active[s] = False
+    return {"migration_bytes": mig, "page_copies": copies,
+            "admit_page_writes": admit_writes, "tenant_hot_peak": peaks}
 
 
 def serve_trace_for(cfg, requests: Sequence[tuple], *, slots: int,

@@ -1,3 +1,5 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -6,6 +8,20 @@ import pytest
 # exactly 1 device (the dry-run sets 512 in its own process).
 
 jax.config.update("jax_enable_x64", False)
+
+# Deterministic hypothesis runs in CI: a registered profile with a fixed
+# (derandomized) seed and no deadline, selected via HYPOTHESIS_PROFILE=ci in
+# .github/workflows/ci.yml.  Guarded import: hypothesis is a dev extra, and
+# environments without it must still collect the suite.
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci", max_examples=25, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:
+    pass
 
 
 @pytest.fixture(scope="session")

@@ -97,6 +97,28 @@ def test_plan_json_roundtrip_training_golden(prof):
     assert all(isinstance(c, runtime.Candidate) for c in back.candidates)
 
 
+def test_plan_multi_tenant_golden_fixture():
+    """Checked-in golden plan: the multi-tenant plan JSON on disk is (a) a
+    byte-identical ``from_json``/``to_json`` round trip and (b) byte-equal
+    to a freshly computed plan — any planner drift (candidate scoring,
+    window sizing, tenant accounting, serialization) fails this test."""
+    import pathlib
+
+    from repro.runtime.synthetic import synthetic_multi_tenant_trace
+    path = pathlib.Path(__file__).parent / "golden" / "multi_tenant_plan.json"
+    text = path.read_text().rstrip("\n")
+    back = runtime.PlacementPlan.from_json(text)
+    assert back.to_json() == text                    # byte-identical reload
+    wl = synthetic_multi_tenant_trace()
+    fresh = runtime.plan(wl, TPU_V5E, 0.2 * wl.trace.peak_kv_bytes())
+    assert fresh.to_json() == text                   # no silent drift
+    assert fresh == back
+    assert back.policy == "sentinel_slo"
+    assert back.slot_tenants == wl.slot_tenants
+    assert back.tenant_quotas == dict(sorted(wl.tenant_quotas.items()))
+    assert not back.tenant_violations                # the SLO report card
+
+
 def test_plan_feeds_offload_engine(prof):
     """The unified plan drives the training offload config end to end."""
     from repro.core import offload
