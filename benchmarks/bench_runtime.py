@@ -12,8 +12,13 @@ Gates (exit non-zero on failure):
     lifetime-aware object policy must not lose to the page-grain reactive
     baseline (``sentinel_mi`` vs ``ial`` on training, ``sentinel`` vs
     ``lru_page`` on serving);
-  - both plans must round-trip through ``PlacementPlan.to_json`` /
-    ``from_json`` byte-identically (planner-drift canary).
+  - every plan — including a latency-objective plan carrying its serialized
+    ``CostModel`` and predicted step times — must round-trip through
+    ``PlacementPlan.to_json`` / ``from_json`` byte-identically
+    (planner-drift canary).
+
+Every row also carries the time-domain prediction (``pred_time_s``): the
+policy's recorded per-step traffic priced on the machine's ``CostModel``.
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ def sweep(workload, hw, hw_name: str, kind: str, peak: float, policies,
     """One (workload, hw) sweep: plan once, then simulate every policy at
     every fast-memory fraction."""
     pl = runtime.plan(workload, hw, 0.2 * peak)
+    cm = runtime.as_cost_model(hw)
     rows, results = [], {}
     for frac in fracs:
         fast = frac * peak
@@ -46,7 +52,8 @@ def sweep(workload, hw, hw_name: str, kind: str, peak: float, policies,
             rows.append(("bench_runtime", kind, hw_name, frac, pol,
                          round(r.slowdown, 4),
                          round(r.decode_throughput, 1), r.migrations,
-                         round(r.slow_bytes_accessed / 1e9, 4)))
+                         round(r.slow_bytes_accessed / 1e9, 4),
+                         round(cm.price_result(r).time, 6)))
     return pl, rows, results
 
 
@@ -59,7 +66,8 @@ def main(argv=None):
     prof = synthetic_profile()
     trace = synthetic_serve_trace()
     header = ("bench_runtime", "workload", "hw", "fast_frac", "policy",
-              "slowdown", "tok_per_s", "migrations", "slow_gb")
+              "slowdown", "tok_per_s", "migrations", "slow_gb",
+              "pred_time_s")
     rows, checks = [header], []
     ok = True
 
@@ -90,8 +98,17 @@ def main(argv=None):
     gate("serving_sentinel_vs_page@20%", "sentinel", "lru_page",
          res_s[(0.2, "sentinel")].time, res_s[(0.2, "lru_page")].time)
 
+    # ---- latency objective: plan by predicted time on the default model ----
+    from repro.core.hardware import default_cost_model
+    pl_lat = runtime.plan(trace, default_cost_model(),
+                          0.2 * trace.peak_kv_bytes(), objective="latency")
+    print(f"check,latency_plan,policy={pl_lat.policy},"
+          f"pred_time={pl_lat.predicted_time:.6f}s,"
+          f"pred_tok_per_s={pl_lat.predicted_decode_throughput:.1f}")
+
     # ---- plan serialization canary: byte-identical JSON round trip ----
-    for kind, pl in (("training", pl_t), ("serving", pl_s)):
+    for kind, pl in (("training", pl_t), ("serving", pl_s),
+                     ("serving_latency", pl_lat)):
         s = pl.to_json()
         stable = runtime.PlacementPlan.from_json(s).to_json() == s
         ok &= stable
@@ -107,7 +124,8 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump({"rows": [list(r) for r in rows],
                        "plans": {"training": pl_t.to_dict(),
-                                 "serving": pl_s.to_dict()},
+                                 "serving": pl_s.to_dict(),
+                                 "serving_latency": pl_lat.to_dict()},
                        "checks": checks}, f, indent=2)
         print(f"wrote {args.json}")
     if not ok:

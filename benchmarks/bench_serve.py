@@ -14,11 +14,18 @@ policy runs on every workload.
     PYTHONPATH=src python -m benchmarks.bench_serve \
         --arch smollm-360m --fracs 0.1,0.2 --slots 4 --policies sentinel,lru_page
     PYTHONPATH=src python -m benchmarks.bench_serve \
-        --paged --shared-prefix --json BENCH_serve.json
+        --objective latency --paged --shared-prefix --json BENCH_serve.json
 
 Exits non-zero if the Sentinel object policy loses to the best page-grain
 baseline at the paper's headline 20% fast-memory fraction — the CI smoke
-gate.  ``--paged`` additionally runs the real ContinuousBatcher in the
+gate.  ``--objective latency`` additionally runs the time-domain sweep:
+every policy's recorded per-step traffic is priced on the shared default
+``CostModel`` (``core.hardware.default_cost_model``) and the gates move
+from migration bytes to *simulated seconds* — at 20% fast memory
+``sentinel`` must be at least as fast as ``lru_page`` in predicted time
+and within 8% of ``all_fast`` (the paper's headline parity claim), and the
+latency-objective planner must pick ``alpha_migration`` somewhere it beats
+the bytes-objective plan's predicted time.  ``--paged`` additionally runs the real ContinuousBatcher in the
 tiered layouts (global-boundary concat, per-slot paged, and the persistent
 page pools with ``use_paged_decode`` — attention writing into and reading
 from the physical pools through ``ops.paged_decode_attention``) on a
@@ -91,6 +98,55 @@ def run(arch: str = ARCH, fracs=FRACS, slots_list=SLOTS, policies=None):
                     verdicts.append((hw_name, slots,
                                      best["sentinel"].decode_throughput, page))
     return rows, verdicts
+
+
+def run_latency(arch: str = ARCH, fracs=FRACS, slots_list=SLOTS):
+    """Time-domain sweep (``--objective latency``): price each policy's
+    recorded per-step traffic on the shared default cost model and compare
+    predicted seconds, the measurement ``runtime.plan(objective="latency")``
+    selects by.  Returns rows, the 20% gate inputs
+    ``(slots, sentinel_s, lru_page_s, all_fast_s)``, and the cells where the
+    latency-objective plan picked ``alpha_migration`` and beat the
+    bytes-objective plan's predicted time."""
+    from repro.core.hardware import default_cost_model
+    cm = default_cost_model()
+    cfg = get_config(arch)
+    rows = [("bench_serve_latency", "slots", "fast_frac", "policy",
+             "pred_tok_per_s", "pred_slowdown", "pred_time_s")]
+    gates = []
+    alpha_wins = []
+    for slots in slots_list:
+        trace = build_trace(cfg, slots)
+        peak = trace.peak_kv_bytes()
+        for frac in fracs:
+            fast = frac * peak
+            pl_lat = runtime.plan(trace, cm, fast, objective="latency")
+            pl_byt = runtime.plan(trace, cm, fast)
+            t_bytes = cm.price_result(pl_byt.sim).time
+            reps = {}
+            for pol in ("sentinel", "lru_page", "all_fast"):
+                knobs = ({"lookahead": pl_lat.lookahead}
+                         if pol == "sentinel" else {})
+                r = runtime.simulate(trace, cm, fast, pol, **knobs)
+                reps[pol] = rep = cm.price_result(r)
+                rows.append(("bench_serve_latency", slots, frac, pol,
+                             round(rep.tokens_per_s, 1),
+                             round(rep.slowdown, 4), round(rep.time, 6)))
+            rows.append(("bench_serve_latency", slots, frac,
+                         f"plan:{pl_lat.policy}",
+                         round(pl_lat.predicted_decode_throughput, 1),
+                         round(pl_lat.predicted_time
+                               / max(reps["all_fast"].time, 1e-30), 4),
+                         round(pl_lat.predicted_time, 6)))
+            if abs(frac - 0.2) < 1e-9:
+                gates.append((slots, reps["sentinel"].time,
+                              reps["lru_page"].time, reps["all_fast"].time))
+            if pl_lat.policy == "alpha_migration" and \
+                    pl_lat.predicted_time < t_bytes:
+                alpha_wins.append((slots, frac,
+                                   round(pl_lat.predicted_time, 6),
+                                   round(t_bytes, 6)))
+    return rows, gates, alpha_wins
 
 
 def run_shared_prefix(fracs=FRACS):
@@ -278,6 +334,10 @@ def main(argv=None):
     ap.add_argument("--policies", default="",
                     help="comma-separated subset of "
                          f"{runtime.list_policies()}")
+    ap.add_argument("--objective", default="bytes",
+                    choices=["bytes", "latency"],
+                    help="latency: also run the time-domain sweep on the "
+                         "default CostModel and gate on predicted seconds")
     ap.add_argument("--paged", action="store_true",
                     help="also run the paged-vs-concat engine smoke + gate")
     ap.add_argument("--shared-prefix", action="store_true",
@@ -319,6 +379,37 @@ def main(argv=None):
                        "status": status})
         print(f"check,{hw_name},slots={slots},sentinel/page@20%={rel:.3f},"
               f"{status}")
+
+    latency_rows = []
+    if args.objective == "latency":
+        lrows, lgates, alpha_wins = run_latency(args.arch, fracs, slots_list)
+        latency_rows += lrows
+        for r in lrows:
+            print(",".join(map(str, r)))
+        if not lgates:
+            checks.append({"check": "latency@20%", "status": "SKIPPED",
+                           "reason": "requires --fracs containing 0.2"})
+            print("check,latency@20%,SKIPPED (needs frac 0.2)")
+        for slots, t_s, t_l, t_af in lgates:
+            rel_af = t_s / max(t_af, 1e-30)
+            l_ok = t_s <= t_l and rel_af <= 1.08
+            ok &= l_ok
+            checks.append({"check": "latency@20%", "slots": slots,
+                           "sentinel_s": round(t_s, 6),
+                           "lru_page_s": round(t_l, 6),
+                           "all_fast_s": round(t_af, 6),
+                           "sentinel_vs_all_fast": round(rel_af, 4),
+                           "status": "OK" if l_ok else "FAIL"})
+            print(f"check,latency@20%,slots={slots},"
+                  f"sentinel={t_s:.6f}s,lru_page={t_l:.6f}s,"
+                  f"vs_all_fast={rel_af:.4f},{'OK' if l_ok else 'FAIL'}")
+        a_ok = bool(alpha_wins)
+        ok &= a_ok
+        checks.append({"check": "alpha_beats_bytes_plan",
+                       "cells": [list(c) for c in alpha_wins],
+                       "status": "OK" if a_ok else "FAIL"})
+        print(f"check,alpha_beats_bytes_plan,cells={len(alpha_wins)},"
+              f"{'OK' if a_ok else 'FAIL'}")
 
     paged_rows = []
     if args.paged:
@@ -408,8 +499,8 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": [list(r) for r in
-                                rows + paged_rows + shared_rows
-                                + tenant_rows],
+                                rows + latency_rows + paged_rows
+                                + shared_rows + tenant_rows],
                        "checks": checks}, f, indent=2)
         print(f"wrote {args.json}")
 

@@ -1,9 +1,14 @@
 """Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
 
 Per (arch × shape × mesh) cell:
-    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s          (197 TF bf16)
-    memory term     = HLO_bytes_per_chip / HBM_bw               (819 GB/s)
-    collective term = wire_bytes_per_chip / link_bw             (50 GB/s ICI)
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / link_bw
+
+The machine constants come from the shared default CostModel
+(``core.hardware.default_cost_model()``, i.e. ``TPU_V5E``'s numbers) — the
+same instance ``runtime.plan`` prices placements with, so the roofline
+table and the planner always describe the same machine.
 
 cost_analysis() of the SPMD-compiled module reports per-chip FLOPs/bytes.
 Collective wire bytes come from the post-SPMD HLO: per-op result bytes with
@@ -27,7 +32,7 @@ import re
 from typing import Optional
 
 from repro.configs.base import SHAPES, get_config
-from repro.core.hardware import TPU_V5E
+from repro.core.hardware import default_cost_model
 
 WIRE_FACTORS = {"all-gather": lambda s: (s - 1) / s,
                 "all-reduce": lambda s: 2 * (s - 1) / s,
@@ -123,7 +128,9 @@ def model_flops(arch: str, shape_name: str, chips: int) -> float:
     return 2.0 * N * D / chips
 
 
-def terms(rec: dict, hw=TPU_V5E) -> Optional[dict]:
+def terms(rec: dict, hw=None) -> Optional[dict]:
+    if hw is None:
+        hw = default_cost_model()
     if not rec.get("ok"):
         return None
     chips = rec["chips"]

@@ -30,6 +30,19 @@ TPU_V5E = HWSpec(
     mig_overhead=5e-6,
 )
 
+def default_cost_model():
+    """The default machine as a time-domain ``CostModel``: TPU_V5E's
+    constants plus the host-side split the byte-domain ``HWSpec`` cannot
+    express.  One shared instance prices the planner (``runtime.plan``),
+    the benchmarks, and the roofline table (``benchmarks/roofline.py``) —
+    the single source of truth for the default machine's numbers.
+
+    Imported lazily: ``repro.runtime.costmodel`` depends on this module
+    for the raw constants."""
+    from repro.runtime.costmodel import TPU_V5E_COST
+    return TPU_V5E_COST
+
+
 # The paper's evaluation platform (Table 2): 2-socket Xeon, local vs remote DDR4.
 PAPER_HM = HWSpec(
     name="paper-xeon-hm",

@@ -73,10 +73,19 @@ def loss_kwargs(scfg: SentinelConfig) -> dict:
 
 
 def from_plan(profile: TraceProfile, plan: PlacementPlan, *,
-              hw: HWSpec = TPU_V5E,
+              cost_model=None, hw: Optional[HWSpec] = None,
               offload_opt_state: bool = False) -> SentinelConfig:
     """Planner output (``runtime.plan``) -> runtime config. The plan's MI is
-    in timeline steps, which map 1:1 to periods inside the fwd/bwd regions."""
+    in timeline steps, which map 1:1 to periods inside the fwd/bwd regions.
+
+    ``cost_model`` is reserved for machine-dependent rounding; the plan
+    already encodes the machine it was priced on, so today neither it nor
+    the deprecated ``hw=`` keyword (kept behind a warning) changes the
+    result."""
+    if hw is not None:
+        from repro.core import warn_deprecated
+        warn_deprecated("core.offload.from_plan(hw=...)",
+                        "from_plan(profile, plan, cost_model=...)")
     mi = mi_to_periods(profile, plan.mi)
     # round to a divisor of num_periods so the blocked scan tiles exactly
     P = profile.num_periods

@@ -8,15 +8,23 @@ through:
     from repro import runtime
 
     # any workload: a profiler TraceProfile or an hmsim ServeTrace
-    plan   = runtime.plan(workload, hw, fast_bytes)          # PlacementPlan
-    result = runtime.simulate(workload, hw, fast_bytes, "sentinel")
+    plan   = runtime.plan(workload, cost_model, fast_bytes)  # PlacementPlan
+    plan   = runtime.plan(workload, cost_model, fast_bytes,
+                          objective="latency")   # select by predicted time
+    result = runtime.simulate(workload, cost_model, fast_bytes, "sentinel")
 
     plan.to_json()                 # bit-stable round trip via from_json
     runtime.list_policies()        # every policy runs on every workload
 
+The machine argument is a ``CostModel`` (``TPU_V5E_COST`` is the default
+instance); a legacy ``HWSpec`` passed in its place is upgraded via
+``CostModel.from_hw`` and behaves identically.
+
 Layout:
   objects.py   MemoryTier / DataObject / AccessTimeline / Workload protocol
                (+ the TraceProfile / ServeTrace adapters)
+  costmodel.py CostModel / StepTraffic / CostReport — the time-domain model
+               pricing each policy's recorded per-step traffic
   policies.py  the one policy registry and the PlacementResult they return
   plan.py      runtime.plan and the serializable PlacementPlan
   synthetic.py deterministic synthetic workloads (golden tests, benchmarks)
@@ -32,6 +40,8 @@ from repro.runtime.objects import (AccessTimeline, DataObject, MemoryTier,
                                    as_workload, merge_tenant_traces,
                                    normalized_quotas, peak_object_bytes,
                                    tiers_from_hw)
+from repro.runtime.costmodel import (TPU_V5E_COST, CostModel, CostReport,
+                                     StepTraffic, as_cost_model)
 from repro.runtime.plan import (Candidate, PlacementPlan, ServeCandidate,
                                 enumerate_candidates, interval_stats,
                                 mi_to_periods, plan, plan_serving,
@@ -43,13 +53,14 @@ from repro.runtime.policies import (PAGE_BYTES, POLICIES, PlacementPolicy,
                                     register_policy, simulate)
 
 __all__ = [
-    "AccessTimeline", "Candidate", "DataObject", "MemoryTier",
-    "MultiTenantWorkload", "PAGE_BYTES", "POLICIES", "PlacementPlan",
-    "PlacementPolicy", "PlacementResult", "ServeCandidate",
-    "ServingWorkload", "Tenant", "TrainingWorkload", "Unit", "Workload",
-    "as_workload", "build_units", "enumerate_candidates", "get_policy",
-    "interval_stats", "list_policies", "merge_tenant_traces",
-    "mi_to_periods", "normalized_quotas", "peak_object_bytes", "plan",
-    "plan_serving", "plan_training", "register_policy", "serve_token_stats",
-    "simulate", "slot_kv_weights", "tiers_from_hw",
+    "AccessTimeline", "Candidate", "CostModel", "CostReport", "DataObject",
+    "MemoryTier", "MultiTenantWorkload", "PAGE_BYTES", "POLICIES",
+    "PlacementPlan", "PlacementPolicy", "PlacementResult", "ServeCandidate",
+    "ServingWorkload", "StepTraffic", "TPU_V5E_COST", "Tenant",
+    "TrainingWorkload", "Unit", "Workload", "as_cost_model", "as_workload",
+    "build_units", "enumerate_candidates", "get_policy", "interval_stats",
+    "list_policies", "merge_tenant_traces", "mi_to_periods",
+    "normalized_quotas", "peak_object_bytes", "plan", "plan_serving",
+    "plan_training", "register_policy", "serve_token_stats", "simulate",
+    "slot_kv_weights", "tiers_from_hw",
 ]

@@ -1,0 +1,276 @@
+"""Time-domain cost model: price per-step traffic, not migration bytes.
+
+Every gate in the repo before this module optimized migration *bytes* — a
+proxy that cannot see bandwidth contention between decode reads and
+background migration.  Sentinel's actual claim is *performance* parity with
+fast-memory-only at ~20% capacity, so the planner needs a clock, not a byte
+counter.  This module supplies it:
+
+  StepTraffic   what one timeline step actually moved: fast/slow demand
+                reads, migration in/out, compute, tokens.  Every policy's
+                ``simulate`` records one per step (``result.step_traffic``).
+  CostModel     the machine the traffic is priced on: per-tier read/write
+                bandwidths, the host interface-vs-internal split, migration
+                contention, and a DMA-overlap factor for the double-buffered
+                paged-decode window.  ``step_time`` prices one step as
+
+                    T_step = max(T_compute, T_roofline, T_HBM, T_ext)
+
+                the per-step pipe maximum of fangyunh's
+                ``Data_Placement_Optimization`` simulator (SNIPPETS.md 1-2):
+                reads and migration share each memory pipe, and the step
+                takes as long as its most-contended pipe.
+  CostReport    ``price`` folds a traffic series to simulated seconds and
+                tokens/sec — the latency objective ``runtime.plan`` selects
+                placements by.
+
+The pipe terms, for visible migration v_in/v_out = (1-dma_overlap) * bytes:
+
+  T_compute   flops / peak_flops
+  T_roofline  (fast_read + slow_read) / fast_read_bw — every byte the step's
+              compute consumed, priced at fast bandwidth.  This floor makes
+              the model *placement-consistent*: an all-fast placement
+              lower-bounds every other placement of the same reads, and
+              slow reads are free exactly while the external pipe hides
+              under this floor (the paper's parity-at-20%-capacity regime).
+  T_HBM       fast_read / fast_read_bw + v_in / fast_write_bw
+              + v_out / fast_read_bw — demand reads and migration copies
+              contend for HBM bandwidth.
+  T_ext       max((slow_read - demand_read) / min(slow_read_bw,
+                                                  host_internal_bw)
+                  + max(v_in / mig_read_bw, v_out / mig_write_bw),
+                  (slow_read + v_in + v_out) / host_internal_bw)
+              — the external pipe seen two ways: the device interface
+              (planned slow reads streamed with the slower migration
+              direction) and the host memory servicing all of it internally.
+
+plus, serialized on top of the maximum, ``demand_read / ext_read_bw``: the
+reactive portion of the slow reads.  A policy that knows the access schedule
+(``plans_ahead``: the sentinel family, static placements) streams its slow
+reads behind the pipe maximum; a reactive one (LRU paging, caching daemons)
+discovers each miss at touch time, so those bytes stall compute — the
+paper's proactive-vs-reactive distinction, and the reason demand paging
+cannot reach prefetch's latency even at equal traffic.
+
+``CostModel`` duck-types ``HWSpec`` (``fast_bw``/``slow_bw``/``mig_bw``
+properties), so it drops into ``runtime.simulate`` and every policy
+unchanged; ``CostModel.from_hw`` upgrades a legacy ``HWSpec`` to a model
+that simulates *identically* (host interface-bound, no DMA overlap).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, fields
+from typing import List, Optional, Sequence
+
+from repro.core.hardware import TPU_V5E, HWSpec
+
+
+@dataclass
+class StepTraffic:
+    """What one timeline step moved — the unit ``CostModel`` prices.
+
+    ``fast_read``/``slow_read`` are bytes the step's compute consumed from
+    each tier (fast includes the placement-independent fixed traffic:
+    KV writes, weight streaming, reserve-pool churn).  ``demand_read`` is
+    the *reactive* portion of ``slow_read``: bytes a schedule-blind policy
+    only discovered it needed when compute touched them, so they cannot be
+    streamed behind the pipe maximum and serialize onto the critical path
+    (the event loop sets it from the policy's ``plans_ahead`` flag — the
+    paper's proactive-vs-reactive distinction).  ``mig_in``/``mig_out``
+    are migration bytes slow->fast / fast->slow attributed to the step;
+    ``migs`` the migration events (each costs ``mig_overhead``), ``stall``
+    seconds already on the critical path (Case-3 / SLO repair copies).
+    ``extra_flops``/``extra_fast`` carry the off-timeline add-on (slot-refill
+    prefill), always fast-tier.
+    """
+    flops: float = 0.0
+    fast_read: float = 0.0
+    slow_read: float = 0.0
+    demand_read: float = 0.0
+    mig_in: float = 0.0
+    mig_out: float = 0.0
+    tokens: int = 0
+    migs: float = 0.0
+    extra_flops: float = 0.0
+    extra_fast: float = 0.0
+    stall: float = 0.0
+
+
+@dataclass
+class CostReport:
+    """A priced traffic series: the latency objective's measurement."""
+    time: float                      # predicted seconds for the series
+    compute_time: float              # all-fast prediction of the same reads
+    tokens: int
+    step_times: List[float] = field(default_factory=list)
+
+    @property
+    def slowdown(self) -> float:
+        return self.time / max(self.compute_time, 1e-30)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / max(self.time, 1e-30)
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """The machine a ``StepTraffic`` series is priced on.
+
+    Bandwidths are bytes/second.  ``slow_read_bw`` is the *interface* a
+    demand read from the slow tier comes through (PCIe for a TPU host tier);
+    ``host_internal_bw`` is the slow tier's internal bandwidth servicing
+    demand reads AND migration copies together (``inf`` = interface-bound,
+    the legacy two-bandwidth model).  ``mig_read_bw``/``mig_write_bw`` are
+    the migration DMA engines per direction; ``dma_overlap`` is the fraction
+    of migration traffic the double-buffered paged-decode window hides
+    behind compute (0 = fully exposed, the legacy model's assumption).
+    """
+    name: str = "costmodel"
+    peak_flops: float = 1e12
+    fast_read_bw: float = 1e11
+    fast_write_bw: float = 1e11
+    slow_read_bw: float = 1e10
+    mig_read_bw: float = 1e10
+    mig_write_bw: float = 1e10
+    host_internal_bw: float = math.inf
+    link_bw: float = 0.0
+    dma_overlap: float = 0.0
+    mig_overhead: float = 0.0
+    fast_bytes: float = 0.0
+
+    # ------------------------------------------------ HWSpec duck-typing --
+    # Every policy and simulator reads hw.fast_bw/slow_bw/mig_bw; a
+    # CostModel drops in wherever an HWSpec was accepted.
+    @property
+    def fast_bw(self) -> float:
+        return self.fast_read_bw
+
+    @property
+    def slow_bw(self) -> float:
+        return self.slow_read_bw
+
+    @property
+    def mig_bw(self) -> float:
+        return self.mig_read_bw
+
+    @classmethod
+    def from_hw(cls, hw) -> "CostModel":
+        """Upgrade an ``HWSpec`` (or pass a CostModel through).  The mapped
+        model simulates and prices the legacy machine exactly: interface-
+        bound host (``host_internal_bw = inf``), symmetric migration DMA,
+        no DMA overlap."""
+        if isinstance(hw, cls):
+            return hw
+        return cls(name=hw.name, peak_flops=hw.peak_flops,
+                   fast_read_bw=hw.fast_bw, fast_write_bw=hw.fast_bw,
+                   slow_read_bw=hw.slow_bw, mig_read_bw=hw.mig_bw,
+                   mig_write_bw=hw.mig_bw, host_internal_bw=math.inf,
+                   link_bw=hw.link_bw, dma_overlap=0.0,
+                   mig_overhead=hw.mig_overhead, fast_bytes=hw.fast_bytes)
+
+    # ------------------------------------------------------------ pricing --
+    def ext_read_bw(self) -> float:
+        """Effective demand-read bandwidth from the slow tier: the slower of
+        the device interface and the host's internal memory."""
+        return min(self.slow_read_bw, self.host_internal_bw)
+
+    def optimal_alpha(self) -> float:
+        """Bandwidth-optimal fast:total read split.  Splitting a read stream
+        alpha fast / (1-alpha) slow equalizes the two pipes' times when
+        alpha/(1-alpha) = B_fast/B_ext, i.e. alpha = B_fast/(B_fast+B_ext)
+        — reads beyond that fraction buy no time, only migration traffic."""
+        return self.fast_read_bw / (self.fast_read_bw + self.ext_read_bw())
+
+    def step_time(self, tr: StepTraffic) -> float:
+        """Price one step: max over the contended pipes (see module doc),
+        plus the serialized demand misses — a reactive policy's slow reads
+        are discovered at touch time and stall compute instead of streaming
+        behind it (the planned remainder overlaps inside ``T_ext``)."""
+        vin = tr.mig_in * (1.0 - self.dma_overlap)
+        vout = tr.mig_out * (1.0 - self.dma_overlap)
+        planned_slow = max(0.0, tr.slow_read - tr.demand_read)
+        t_compute = tr.flops / self.peak_flops
+        t_roofline = (tr.fast_read + tr.slow_read) / self.fast_read_bw
+        t_hbm = tr.fast_read / self.fast_read_bw \
+            + vin / self.fast_write_bw + vout / self.fast_read_bw
+        t_ext = max(planned_slow / self.ext_read_bw()
+                    + max(vin / self.mig_read_bw, vout / self.mig_write_bw),
+                    (tr.slow_read + vin + vout) / self.host_internal_bw)
+        t = max(t_compute, t_roofline, t_hbm, t_ext)
+        return t + min(tr.demand_read, tr.slow_read) / self.ext_read_bw() \
+            + self._extra_time(tr) + tr.stall \
+            + tr.migs * self.mig_overhead
+
+    def step_time_all_fast(self, tr: StepTraffic) -> float:
+        """The same step with every demand byte in the fast tier and no
+        migration: the roofline floor ``step_time`` can never beat."""
+        return max(tr.flops / self.peak_flops,
+                   (tr.fast_read + tr.slow_read) / self.fast_read_bw) \
+            + self._extra_time(tr)
+
+    def _extra_time(self, tr: StepTraffic) -> float:
+        if not tr.extra_flops and not tr.extra_fast:
+            return 0.0
+        return max(tr.extra_flops / self.peak_flops,
+                   tr.extra_fast / self.fast_read_bw)
+
+    def price(self, traffic: Sequence[StepTraffic]) -> CostReport:
+        """Fold a traffic series to predicted seconds and tokens/sec."""
+        step_times = [self.step_time(tr) for tr in traffic]
+        return CostReport(time=sum(step_times),
+                          compute_time=sum(self.step_time_all_fast(tr)
+                                           for tr in traffic),
+                          tokens=int(sum(tr.tokens for tr in traffic)),
+                          step_times=step_times)
+
+    def price_result(self, result) -> CostReport:
+        """Price a ``PlacementResult`` through its recorded traffic."""
+        traffic = getattr(result, "step_traffic", None)
+        if traffic is None:
+            raise ValueError(
+                f"result for policy {result.policy!r} carries no "
+                "step_traffic (was it built by runtime.simulate?)")
+        return self.price(traffic)
+
+    # --------------------------------------------------------------- json --
+    def to_dict(self) -> dict:
+        """JSON-safe dict (``inf`` host bandwidth serialized as None)."""
+        d = {f.name: getattr(self, f.name) for f in fields(self)}
+        if math.isinf(d["host_internal_bw"]):
+            d["host_internal_bw"] = None
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CostModel":
+        d = dict(d)
+        if d.get("host_internal_bw") is None:
+            d["host_internal_bw"] = math.inf
+        return cls(**d)
+
+
+def as_cost_model(hw_or_cost) -> CostModel:
+    """Coerce an ``HWSpec`` or ``CostModel`` into a ``CostModel``."""
+    return CostModel.from_hw(hw_or_cost)
+
+
+# The default machine: TPU_V5E's constants as a time-domain model.  Shared
+# with ``benchmarks/roofline.py`` (``core.hardware.default_cost_model``), so
+# the roofline table and the planner price the same machine.  Extends the
+# legacy constants (identical where they overlap) with the host split and
+# the paged-decode double-buffering overlap the byte-domain model ignored.
+TPU_V5E_COST = CostModel(
+    name=TPU_V5E.name,
+    peak_flops=TPU_V5E.peak_flops,
+    fast_read_bw=TPU_V5E.fast_bw,
+    fast_write_bw=TPU_V5E.fast_bw,
+    slow_read_bw=TPU_V5E.slow_bw,      # PCIe-bound host reads
+    mig_read_bw=TPU_V5E.mig_bw,        # PCIe gen4 x16 per direction
+    mig_write_bw=TPU_V5E.mig_bw,
+    host_internal_bw=204e9,            # 8-channel DDR5 host, far above PCIe
+    link_bw=TPU_V5E.link_bw,
+    dma_overlap=0.5,                   # double-buffered paged-decode window
+    mig_overhead=TPU_V5E.mig_overhead,
+    fast_bytes=TPU_V5E.fast_bytes,
+)

@@ -1,5 +1,16 @@
-"""The unified planner: ``runtime.plan(workload, hw, fast_bytes)`` for both
-training and serving, returning one serializable ``PlacementPlan``.
+"""The unified planner: ``runtime.plan(workload, cost_model, fast_bytes)``
+for both training and serving, returning one serializable ``PlacementPlan``.
+
+The machine is a ``CostModel`` (runtime/costmodel.py); a legacy ``HWSpec``
+passed positionally is upgraded in place via ``CostModel.from_hw`` (the
+upgraded model simulates identically), and the deprecated ``hw=`` keyword
+still works behind a warning.  ``objective`` selects what the measured sweep
+optimizes: ``"bytes"`` (default) keeps the legacy byte-domain clock and its
+golden plans byte-stable; ``"latency"`` selects the candidate whose recorded
+per-step traffic the CostModel prices fastest — and, for serving, also
+auditions the ``alpha_migration`` policy against the default, since holding
+the read split at the bandwidth-optimal alpha can win in the time domain
+while losing in the byte domain.
 
 Training (paper §4.4) — given one profiled training step:
   1. compute RS(MI), Data(MI), T(MI) for every candidate interval,
@@ -32,10 +43,38 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro.core import warn_deprecated
 from repro.core.hardware import HWSpec
+from repro.runtime.costmodel import CostModel, CostReport
 from repro.runtime.objects import (MemoryTier, TrainingWorkload, as_workload,
                                    tiers_from_hw)
 from repro.runtime.policies import PlacementResult, get_policy, simulate
+
+OBJECTIVES = ("bytes", "latency")
+
+
+def _resolve_cost_model(cost_model, hw, caller: str) -> CostModel:
+    """Collapse the machine arguments to one CostModel.  ``cost_model``
+    (positional) accepts a CostModel or a legacy HWSpec (upgraded silently —
+    they simulate identically); the old ``hw=`` keyword warns."""
+    if hw is not None:
+        if cost_model is not None:
+            raise TypeError(f"runtime.{caller}() got both cost_model and "
+                            "the deprecated hw=")
+        warn_deprecated(f"runtime.{caller}(hw=...)",
+                        f"runtime.{caller}(workload, cost_model, fast_bytes)",
+                        stacklevel=4)
+        cost_model = hw
+    if cost_model is None:
+        raise TypeError(f"runtime.{caller}() needs a machine: pass a "
+                        "CostModel (or an HWSpec) as the second argument")
+    return CostModel.from_hw(cost_model)
+
+
+def _check_objective(objective: str, caller: str) -> None:
+    if objective not in OBJECTIVES:
+        raise ValueError(f"runtime.{caller}(objective={objective!r}): "
+                         f"expected one of {OBJECTIVES}")
 
 
 # ================================================================ candidates ==
@@ -107,6 +146,12 @@ class PlacementPlan:
     tiers: Optional[List[MemoryTier]] = None
     candidates: List[Any] = field(default_factory=list)
     sim: Optional[PlacementResult] = None
+    # ---- time-domain half (populated by objective="latency" only; the
+    # bytes default serializes without these keys, keeping golden plan JSON
+    # from earlier PRs byte-identical) ----
+    objective: str = "bytes"
+    cost_model: Optional[CostModel] = None
+    predicted_step_times: Optional[List[float]] = None
 
     # ------------------------------------------------------------ queries --
     @property
@@ -116,6 +161,19 @@ class PlacementPlan:
     @property
     def decode_throughput(self) -> float:
         return self.sim.decode_throughput if self.sim else 0.0
+
+    @property
+    def predicted_time(self) -> float:
+        """CostModel-predicted seconds for the whole timeline (0.0 on
+        bytes-objective plans, which carry no prediction)."""
+        return sum(self.predicted_step_times) if self.predicted_step_times \
+            else 0.0
+
+    @property
+    def predicted_decode_throughput(self) -> float:
+        """Predicted tokens/second under the plan's CostModel."""
+        t = self.predicted_time
+        return self.sim.tokens / t if (self.sim and t) else 0.0
 
     def cold_len(self, max_seq: int) -> int:
         """Cold-prefix length for a ``max_seq``-token cache buffer (global
@@ -145,6 +203,12 @@ class PlacementPlan:
         d = dataclasses.asdict(self)
         for c, cd in zip(self.candidates, d["candidates"]):
             cd["_type"] = "interval" if isinstance(c, Candidate) else "serve"
+        if self.objective == "bytes":
+            # legacy serialization: bytes-objective plans predate the time
+            # domain, and their golden JSON must stay byte-for-byte stable
+            del d["objective"], d["cost_model"], d["predicted_step_times"]
+        elif self.cost_model is not None:
+            d["cost_model"] = self.cost_model.to_dict()   # inf -> None
         return d
 
     def to_json(self) -> str:
@@ -167,6 +231,8 @@ class PlacementPlan:
         d["sim"] = _result_from_dict(d.get("sim"))
         if d.get("tiers") is not None:
             d["tiers"] = [MemoryTier(**t) for t in d["tiers"]]
+        if d.get("cost_model") is not None:
+            d["cost_model"] = CostModel.from_dict(d["cost_model"])
         return cls(**d)
 
     @classmethod
@@ -229,16 +295,24 @@ def enumerate_candidates(profile, hw: HWSpec, fast_bytes: float,
     return out
 
 
-def plan_training(workload, hw: HWSpec, fast_bytes: float, *,
+def plan_training(workload, cost_model=None, fast_bytes: float = None, *,
                   policy: str = "sentinel_mi", max_mi: Optional[int] = None,
-                  sim_all: bool = False) -> PlacementPlan:
+                  sim_all: bool = False, objective: str = "bytes",
+                  hw=None) -> PlacementPlan:
     """Pick the optimal migration interval.
 
     Note on Eq. 2: the paper states T(MI) > (S - RS)/BW — the worst case of a
     full fast-memory refill.  We prune with the tighter per-interval form
     T(MI) > Data(MI)/BW (a superset of the paper's surviving candidates) and
     let the measured sweep decide, exactly as the paper's runtime does.
+
+    ``objective="latency"`` keeps the same candidate pool but selects the MI
+    whose recorded traffic the CostModel prices fastest (migration copies
+    contend with the training step's own reads there, which the byte-domain
+    clock cannot see).
     """
+    cm = _resolve_cost_model(cost_model, hw, "plan_training")
+    _check_objective(objective, "plan_training")
     wl = as_workload(workload)
     profile = getattr(wl, "profile", None)
     if profile is None:                      # protocol workloads / timelines
@@ -248,24 +322,32 @@ def plan_training(workload, hw: HWSpec, fast_bytes: float, *,
                         "sources a TraceProfile (candidate enumeration reads "
                         "the profiled objects)")
     pol = get_policy(policy)
-    cands = enumerate_candidates(profile, hw, fast_bytes, max_mi)
+    cands = enumerate_candidates(profile, cm, fast_bytes, max_mi)
     survivors = [c for c in cands if c.space_ok and c.time_ok]
     if not survivors:                        # fall back: least-bad candidates
         survivors = [c for c in cands if c.space_ok] or cands
     steps_used = 1                           # the profiling step
     best: Optional[Candidate] = None
+    best_pred: Optional[CostReport] = None
     pool = survivors if not sim_all else cands
     for c in pool:
-        c.sim = pol.simulate(wl, hw, fast_bytes, mi=c.mi)
+        c.sim = pol.simulate(wl, cm, fast_bytes, mi=c.mi)
         steps_used += 1 + c.sim.detail.get("tt_steps_used", 0)
-        if best is None or c.sim.time < best.sim.time:
+        if objective == "latency":
+            pred = cm.price_result(c.sim)
+            if best is None or pred.time < best_pred.time:
+                best, best_pred = c, pred
+        elif best is None or c.sim.time < best.sim.time:
             best = c
     stall = best.sim.detail.get("tt_choice", "stall") != "slow-access"
     return PlacementPlan(
         kind="training", policy=policy, fast_bytes=fast_bytes,
         rs=best.sim.detail.get("rs", 0.0), mi=best.mi, stall_on_case3=stall,
-        steps_used=steps_used, tiers=tiers_from_hw(hw, fast_bytes),
-        candidates=cands, sim=best.sim)
+        steps_used=steps_used, tiers=tiers_from_hw(cm, fast_bytes),
+        candidates=cands, sim=best.sim, objective=objective,
+        cost_model=cm if objective == "latency" else None,
+        predicted_step_times=list(best_pred.step_times)
+        if best_pred else None)
 
 
 def mi_to_periods(profile, mi: int) -> int:
@@ -344,10 +426,10 @@ def _tenant_knobs(wl, policy: str) -> dict:
     return knobs
 
 
-def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
+def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
                  policy: Optional[str] = None,
-                 lookaheads: Sequence[int] = (2, 4, 8, 16, 32)
-                 ) -> PlacementPlan:
+                 lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
+                 objective: str = "bytes", hw=None) -> PlacementPlan:
     """Pick the hot window and prefetch look-ahead for serving-time tiering.
 
     On a multi-tenant workload (one exposing ``tenants`` — see
@@ -355,7 +437,16 @@ def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
     per-slot hot windows are sized inside each tenant's guaranteed share,
     and the plan carries the per-tenant accounting
     (``slot_tenants`` / ``tenant_quotas`` / ``tenant_fast_bytes`` /
-    ``tenant_violations``)."""
+    ``tenant_violations``).
+
+    ``objective="latency"`` selects by CostModel-predicted decode time and
+    (when no explicit policy is forced and the workload is untenanted) also
+    auditions ``alpha_migration`` against the default policy — every
+    byte-objective candidate stays in the pool, so the latency winner is
+    never priced slower than the bytes winner.  Tenanted workloads keep
+    ``sentinel_slo`` (the SLO guarantees outrank raw predicted time)."""
+    cm = _resolve_cost_model(cost_model, hw, "plan_serving")
+    _check_objective(objective, "plan_serving")
     wl = as_workload(workload)
     trace = getattr(wl, "trace", None)
     if trace is None:                        # protocol workloads / timelines
@@ -365,6 +456,7 @@ def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
                         "sources a ServeTrace (window sizing reads the slot "
                         "geometry)")
     tenants = getattr(wl, "tenants", None)
+    forced_policy = policy is not None
     policy = policy or ("sentinel_slo" if tenants else "sentinel")
     knobs = _tenant_knobs(wl, policy)
     rs = trace.rs_bytes()
@@ -375,7 +467,7 @@ def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
     # (it IS the reserve pool), so the hot window is never below one block
     hot_window = max(trace.block_tokens,
                      int(budget / (slots * kv_tok_all))) if kv_tok_all else 0
-    t_token, _ = serve_token_stats(trace, hw)
+    t_token, _ = serve_token_stats(trace, cm)
     cold_bytes = max(0.0, trace.peak_kv_bytes() - budget)
     # Eq. 1 per-token: the hot windows plus the reserve pool must fit (the
     # floor above can violate this when fast memory is tiny)
@@ -389,17 +481,37 @@ def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
         prefetch = cold_bytes * min(1.0, la / max(1, trace.history_period))
         cands.append(ServeCandidate(la, hot_window, prefetch, t_token,
                                     space_ok=space_ok,
-                                    time_ok=t_token * la * hw.mig_bw
+                                    time_ok=t_token * la * cm.mig_bw
                                     >= prefetch))
     # measure survivors on the simulator (fall back to everything when the
     # constraints kill all candidates, mirroring the training planner)
     pool = [c for c in cands if c.space_ok and c.time_ok] or cands
     best: Optional[ServeCandidate] = None
+    best_pred: Optional[CostReport] = None
+    win_policy, win_sim = policy, None
     for c in pool:
-        c.sim = simulate(wl, hw, fast_bytes, policy, lookahead=c.lookahead,
+        c.sim = simulate(wl, cm, fast_bytes, policy, lookahead=c.lookahead,
                          **knobs)
-        if best is None or c.sim.decode_throughput > best.sim.decode_throughput:
+        if objective == "latency":
+            pred = cm.price_result(c.sim)
+            if best is None or pred.time < best_pred.time:
+                best, best_pred, win_sim = c, pred, c.sim
+        elif best is None or \
+                c.sim.decode_throughput > best.sim.decode_throughput:
             best = c
+    if objective == "latency" and not forced_policy and not tenants:
+        # audition alpha_migration over the same pool: it can only win under
+        # the time-domain clock (it deliberately leaves cold-tail reads
+        # slow), so the byte-domain sweep would never surface it
+        for c in pool:
+            alt = simulate(wl, cm, fast_bytes, "alpha_migration",
+                           lookahead=c.lookahead, **knobs)
+            pred = cm.price_result(alt)
+            if pred.time < best_pred.time:
+                best, best_pred = c, pred
+                win_policy, win_sim = "alpha_migration", alt
+    if win_sim is None:
+        win_sim = best.sim
 
     # Eq. 1 refined per slot: distribute the hot-token budget in proportion
     # to each slot's own decode schedule (KV byte-seconds), floor one block
@@ -424,37 +536,48 @@ def plan_serving(workload, hw: HWSpec, fast_bytes: float, *,
                         for w in weights]
 
     return PlacementPlan(
-        kind="serving", policy=policy, fast_bytes=fast_bytes, rs=rs,
+        kind="serving", policy=win_policy, fast_bytes=fast_bytes, rs=rs,
         hot_window=best.hot_window, lookahead=best.lookahead,
         slot_hot_windows=slot_windows, page_tokens=blk,
         slot_tenants=list(slot_tenants) if tenants and slot_tenants else None,
         tenant_quotas=dict(sorted(quotas.items()))
         if tenants and quotas else None,
-        tenant_fast_bytes=dict(best.sim.tenant_fast_bytes) or None
+        tenant_fast_bytes=dict(win_sim.tenant_fast_bytes) or None
         if tenants else None,
-        tenant_violations=dict(best.sim.tenant_violations)
-        if tenants and best.sim.tenant_violations else None,
-        tiers=tiers_from_hw(hw, fast_bytes), candidates=cands, sim=best.sim)
+        tenant_violations=dict(win_sim.tenant_violations)
+        if tenants and win_sim.tenant_violations else None,
+        tiers=tiers_from_hw(cm, fast_bytes), candidates=cands, sim=win_sim,
+        objective=objective,
+        cost_model=cm if objective == "latency" else None,
+        predicted_step_times=list(best_pred.step_times)
+        if best_pred else None)
 
 
 # ================================================================ entrypoint ==
 
-def plan(workload, hw: HWSpec, fast_bytes: float, *,
+def plan(workload, cost_model=None, fast_bytes: float = None, *,
          policy: Optional[str] = None, max_mi: Optional[int] = None,
          sim_all: bool = False,
-         lookaheads: Sequence[int] = (2, 4, 8, 16, 32)) -> PlacementPlan:
+         lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
+         objective: str = "bytes", hw=None) -> PlacementPlan:
     """THE entry point: profile -> plan for any workload.
 
     ``workload`` is a training ``TraceProfile``, a serving ``ServeTrace``, a
-    ``MultiTenantWorkload``, or a ``Workload`` adapter.  ``policy`` names a
-    registered placement policy (default: ``sentinel_mi`` for training,
-    ``sentinel`` for serving, ``sentinel_slo`` for multi-tenant serving);
-    the remaining knobs apply to the matching planner half only.
+    ``MultiTenantWorkload``, or a ``Workload`` adapter.  ``cost_model`` is
+    the machine — a ``CostModel``, or a legacy ``HWSpec`` upgraded in place
+    (the deprecated ``hw=`` keyword warns).  ``policy`` names a registered
+    placement policy (default: ``sentinel_mi`` for training, ``sentinel``
+    for serving, ``sentinel_slo`` for multi-tenant serving); ``objective``
+    is ``"bytes"`` (legacy clock, default) or ``"latency"`` (select by
+    CostModel-predicted time); the remaining knobs apply to the matching
+    planner half only.
     """
+    cm = _resolve_cost_model(cost_model, hw, "plan")
     wl = as_workload(workload)
     if wl.kind == "training":
-        return plan_training(wl, hw, fast_bytes,
+        return plan_training(wl, cm, fast_bytes,
                              policy=policy or "sentinel_mi",
-                             max_mi=max_mi, sim_all=sim_all)
-    return plan_serving(wl, hw, fast_bytes, policy=policy,
-                        lookaheads=lookaheads)
+                             max_mi=max_mi, sim_all=sim_all,
+                             objective=objective)
+    return plan_serving(wl, cm, fast_bytes, policy=policy,
+                        lookaheads=lookaheads, objective=objective)

@@ -36,6 +36,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Type
 
 from repro.core.hardware import HWSpec
+from repro.runtime.costmodel import StepTraffic
 from repro.runtime.objects import AccessTimeline, as_workload
 
 PAGE_BYTES = 2 << 20          # huge-page granularity for page-grain baselines
@@ -144,6 +145,11 @@ class PlacementPolicy:
 
     name = "base"
     granularity = "object"
+    # Does the policy know the access schedule ahead of time?  Planned slow
+    # reads stream behind compute (priced inside the pipe maximum); reactive
+    # policies discover misses at touch time, so the cost model serializes
+    # their slow reads (StepTraffic.demand_read).
+    plans_ahead = False
 
     def __init__(self, timeline, hw, fast_bytes: float, **knobs):
         self.timeline = timeline
@@ -335,7 +341,10 @@ class PlacementPolicy:
         pol = cls(tl, hw, max(0.0, fast_bytes - tl.reserved_bytes), **knobs)
         total = compute_lb = 0.0
         tokens = 0
+        traffic: List[StepTraffic] = []
         for t in range(tl.num_steps):
+            s2f0, f2s0 = pol.bytes_s2f, pol.bytes_f2s
+            stall0 = pol.stall_time
             pol.on_free(t, tl.frees.get(t, ()))
             pol.on_admit(t, tl.admits.get(t, ()))
             pol.on_birth(t, tl.births.get(t, ()))
@@ -352,8 +361,16 @@ class PlacementPolicy:
                               (bf + bs + fixed) / hw.fast_bw)
             compute_lb += tl.extra_time(t, hw)
             tokens += tl.tokens[t]
+            traffic.append(StepTraffic(
+                flops=tl.flops[t], fast_read=bf + fixed, slow_read=bs,
+                demand_read=0.0 if cls.plans_ahead else bs,
+                mig_in=pol.bytes_s2f - s2f0, mig_out=pol.bytes_f2s - f2s0,
+                tokens=tl.tokens[t], migs=migs,
+                extra_flops=tl.extra_flops[t],
+                extra_fast=tl.extra_fast_bytes[t],
+                stall=pol.stall_time - stall0))
         total += pol.stall_time          # SLO repairs stall the decode stream
-        return PlacementResult(
+        res = PlacementResult(
             policy=cls.name, time=total, compute_time=compute_lb,
             tokens=tokens, migrations=pol.migrations, bytes_s2f=pol.bytes_s2f,
             bytes_f2s=pol.bytes_f2s, stall_time=pol.stall_time,
@@ -362,11 +379,16 @@ class PlacementPolicy:
             tenant_violations=dict(sorted(pol.tenant_violations.items())),
             detail={"fast_bytes": fast_bytes, "peak_kv": tl.peak_bytes(),
                     "peak_fast_used": pol.peak_fast_used, **knobs})
+        # dynamic attribute (not a dataclass field): the per-step traffic a
+        # CostModel prices; kept off asdict() so plan JSON stays byte-stable
+        res.step_traffic = traffic
+        return res
 
 
 @register_policy("prefer_fast")
 class PreferFast(PlacementPolicy):
     """Static PreferHBM: fast while room remains, no migration ever."""
+    plans_ahead = True       # placement is fixed -> slow reads are streamable
 
 
 @register_policy("lru_page")
@@ -506,6 +528,8 @@ class SentinelLifetime(PlacementPolicy):
     next access is farthest away (or never) to make room — Belady at object
     granularity, bandwidth-capped like the paper's migration threads.
     """
+
+    plans_ahead = True
 
     def __init__(self, timeline, hw, fast_bytes, *, lookahead: int = 8,
                  **knobs):
@@ -868,6 +892,59 @@ def _all_fast_times(tl: AccessTimeline, hw: HWSpec) -> List[float]:
     return [tl.step_time_all_fast(s, hw) for s in range(tl.num_steps)]
 
 
+@register_policy("alpha_migration")
+class AlphaMigration(SentinelLifetime):
+    """Sentinel with a bandwidth-optimal stopping rule for promotion.
+
+    Splitting a read stream alpha fast / (1-alpha) slow equalizes the two
+    memory pipes' service times at ``alpha* = B_fast / (B_fast + B_ext)``
+    (fangyunh's AlphaMigration; derivation in docs/POLICIES.md): reads
+    promoted beyond that split cannot shorten the step — the fast pipe is
+    already the slower of the two — they only add migration traffic.  So
+    this policy builds the same greedy-by-score fast set as ``sentinel`` but
+    stops admitting objects once the covered look-ahead read bytes reach
+    alpha* of the horizon's total, deliberately leaving the cold tail slow.
+
+    Under the byte-domain clock it can only tie or lose to ``sentinel``
+    (slow reads always cost there); under a ``CostModel`` with a real host
+    tier the saved migration traffic wins — which is exactly the
+    ``objective="latency"`` planner's reason to consider it.
+
+    Knobs: ``lookahead`` (inherited), ``alpha`` (override the derived
+    split; default ``B_fast / (B_fast + min(slow_read_bw, host_internal))``
+    from the hw/CostModel it runs on).
+    """
+
+    def __init__(self, timeline, hw, fast_bytes, *,
+                 alpha: Optional[float] = None, **knobs):
+        super().__init__(timeline, hw, fast_bytes, **knobs)
+        if alpha is None:
+            ext = min(getattr(hw, "slow_read_bw", hw.slow_bw),
+                      getattr(hw, "host_internal_bw", float("inf")))
+            alpha = hw.fast_bw / (hw.fast_bw + ext)
+        self.alpha = min(1.0, max(0.0, float(alpha)))
+
+    def _desired_fast_set(self, t, scored) -> set:
+        # goal: cover alpha* of the horizon's placeable read bytes
+        # (score * bytes = known reads of the object within the look-ahead)
+        goal = self.alpha * sum(sc * o.bytes for sc, o in scored if sc > 0)
+        target = set()
+        used = covered = 0.0
+        seen_groups = set()
+        for sc, o in scored:
+            if sc <= 0 or covered >= goal:
+                break
+            k = self._group_key(o)
+            eff = o.bytes if k is None or k not in seen_groups else 0.0
+            if used + eff <= self.fast_bytes:
+                target.add(o.uid)
+                used += eff
+                covered += sc * o.bytes
+                if k is not None:
+                    seen_groups.add(k)
+        return target
+
+
 # ====================================================== interval (sentinel) ==
 
 @register_policy("sentinel_mi")
@@ -881,6 +958,8 @@ class SentinelMI(PlacementPolicy):
     ``test_and_trial``, ``stall_on_case3``, ``reserve_pool``,
     ``granularity``/``page_mode`` (object vs page units).
     """
+
+    plans_ahead = True
 
     @classmethod
     def simulate(cls, workload, hw: HWSpec, fast_bytes: float, *,
@@ -921,6 +1000,11 @@ class SentinelMI(PlacementPolicy):
         t_step = _all_fast_times(tl, hw)
         res = PlacementResult(cls.name, 0.0, sum(t_step),
                               tokens=sum(tl.tokens), mi=mi)
+        # per-step traffic for CostModel pricing: demand reads are exact;
+        # interval-level migration/stall is spread evenly over the
+        # interval's steps (the DMA runs concurrently with all of them)
+        records: List[StepTraffic] = []
+        snap = [0.0, 0.0, 0, 0.0]      # bytes_s2f, bytes_f2s, migs, stall
 
         access_map: Dict[int, List[Unit]] = collections.defaultdict(list)
         for u in units:
@@ -1027,6 +1111,11 @@ class SentinelMI(PlacementPolicy):
                         t_fast / hw.fast_bw + bytes_slow / hw.slow_bw)
                 t += tl.extra_time(s, hw)
                 interval_compute += t
+                records.append(StepTraffic(
+                    flops=tl.flops[s], fast_read=t_fast,
+                    slow_read=bytes_slow, tokens=tl.tokens[s],
+                    extra_flops=tl.extra_flops[s],
+                    extra_fast=tl.extra_fast_bytes[s]))
 
             # -- eviction channel accounting (fast->slow, full duplex) --
             evict_capacity = interval_compute * hw.mig_bw - forced_evict_bytes
@@ -1101,9 +1190,19 @@ class SentinelMI(PlacementPolicy):
                     total += stall
                 # else: leave in slow, pay access penalty next interval
 
+            n = hi - lo
+            for r in records[-n:]:
+                r.mig_in += (res.bytes_s2f - snap[0]) / n
+                r.mig_out += (res.bytes_f2s - snap[1]) / n
+                r.migs += (res.migrations - snap[2]) / n
+                r.stall += (res.stall_time - snap[3]) / n
+            snap = [res.bytes_s2f, res.bytes_f2s,
+                    res.migrations, res.stall_time]
+
         res.time = total
         res.detail = {"fast_budget": budget, "rs": rs,
                       "peak_fast_used": peak_fast}
+        res.step_traffic = records
         return res
 
 
@@ -1204,10 +1303,14 @@ class _CachingDaemon(PlacementPolicy):
             return moved
 
         last_rep_time = 0.0
+        traffic: List[StepTraffic] = []
         for rep in range(repeats):
             rep_time = 0.0
             since_opt = 0.0
+            last_rep = rep == repeats - 1
             for s in range(steps):
+                s2f0, f2s0, migs0 = res.bytes_s2f, res.bytes_f2s, \
+                    res.migrations
                 bytes_slow = 0.0
                 for u in access_map.get(s, ()):
                     touched_since_opt[u.uid] = True
@@ -1225,8 +1328,20 @@ class _CachingDaemon(PlacementPolicy):
                     # 4 copy + 8 migration threads): off the critical path
                     optimization_pass(since_opt * hw.mig_bw)
                     since_opt = 0.0
+                if last_rep:
+                    # steady-state traffic only (matches the reported time)
+                    traffic.append(StepTraffic(
+                        flops=tl.flops[s], fast_read=t_fast,
+                        slow_read=bytes_slow, demand_read=bytes_slow,
+                        mig_in=res.bytes_s2f - s2f0,
+                        mig_out=res.bytes_f2s - f2s0,
+                        tokens=tl.tokens[s],
+                        migs=res.migrations - migs0,
+                        extra_flops=tl.extra_flops[s],
+                        extra_fast=tl.extra_fast_bytes[s]))
             last_rep_time = rep_time
         res.time = last_rep_time
+        res.step_traffic = traffic
         return res
 
 
@@ -1245,17 +1360,27 @@ class LRUDaemon(_CachingDaemon):
 
 class _Static(PlacementPolicy):
     where = "fast"
+    plans_ahead = True       # fixed placement: every read is streamable
 
     @classmethod
     def simulate(cls, workload, hw: HWSpec, fast_bytes: float,
                  **_ignored) -> PlacementResult:
         tl = as_workload(workload).timeline()
-        bw = hw.fast_bw if cls.where == "fast" else hw.slow_bw
+        fast = cls.where == "fast"
+        bw = hw.fast_bw if fast else hw.slow_bw
         t = sum(max(tl.flops[s] / hw.peak_flops, tl.total_bytes[s] / bw)
                 + tl.extra_time(s, hw)
                 for s in range(tl.num_steps))
-        return PlacementResult(cls.name, t, sum(_all_fast_times(tl, hw)),
-                               tokens=sum(tl.tokens))
+        res = PlacementResult(cls.name, t, sum(_all_fast_times(tl, hw)),
+                              tokens=sum(tl.tokens))
+        res.step_traffic = [StepTraffic(
+            flops=tl.flops[s],
+            fast_read=tl.total_bytes[s] if fast else 0.0,
+            slow_read=0.0 if fast else tl.total_bytes[s],
+            tokens=tl.tokens[s], extra_flops=tl.extra_flops[s],
+            extra_fast=tl.extra_fast_bytes[s])
+            for s in range(tl.num_steps)]
+        return res
 
 
 @register_policy("all_fast")

@@ -117,6 +117,11 @@ class ContinuousBatcher:
         self._row_bytes = kvcache.kv_token_bytes(cfg, dt_bytes) \
             * cfg.num_layers                       # KV bytes per token, all layers
         self.sim_migration_bytes = 0.0             # device<->host cold traffic
+        # per-decode-step deltas of sim_migration_bytes (admission + boundary
+        # demotions attributed to the step that performed them): the engine's
+        # replayed traffic series, priced by a CostModel and matched
+        # integer-exactly by predict_pool_counters()["step_migration_bytes"]
+        self.step_migration_bytes: list = []
         self.paged = self.tiered = self.caches = self.ptable = None
         self.pool = None
         if paged:
@@ -321,6 +326,7 @@ class ContinuousBatcher:
         all boundary/length bookkeeping runs on host-side mirrors.  Layout
         work happens only at events (admit, a slot growing into a new page,
         a boundary advance)."""
+        mig0 = self.sim_migration_bytes
         self._admit()
         if not any(self.active):
             return False
@@ -407,6 +413,7 @@ class ContinuousBatcher:
                 self.active[slot] = False
         if self.active != was_active:
             self._refresh_active()
+        self.step_migration_bytes.append(self.sim_migration_bytes - mig0)
         return True
 
     def run(self):
@@ -426,8 +433,10 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                           slot_tenants=None) -> dict:
     """Pure-Python replay of the pools-layout batcher's bookkeeping: given
     the request stream ``[(prompt_tokens, decode_tokens[, tenant]), ...]``
-    and a plan, predict ``sim_migration_bytes``, the pool's ``page_copies``
-    / ``admit_page_writes`` counters, and the per-tenant hot-pool byte peaks
+    and a plan, predict ``sim_migration_bytes`` (total and the per-decode-
+    step ``step_migration_bytes`` series a CostModel prices), the pool's
+    ``page_copies`` / ``admit_page_writes`` counters, and the per-tenant
+    hot-pool byte peaks
     — *exactly* (integer-for-integer) what a ``ContinuousBatcher``
     (``paged=True`` + ``use_paged_decode``, no prefix sharing) will report
     on the same deterministic stream.  This is the engine/simulator
@@ -455,6 +464,7 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
     mig = 0.0
     copies = admit_writes = 0
     peaks: dict = {}
+    step_mig: list = []
 
     def slot_tn(s):
         return slot_tenants[s] if slot_tenants else None
@@ -480,6 +490,7 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
             copies += 1
 
     while queue or any(active):
+        mig0 = mig
         for s in range(slots):             # ContinuousBatcher._admit
             if active[s] or not queue:
                 continue
@@ -510,8 +521,10 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                 budget[s] -= 1
                 if budget[s] <= 0:
                     active[s] = False
+        step_mig.append(mig - mig0)        # one engine decode step's delta
     return {"migration_bytes": mig, "page_copies": copies,
-            "admit_page_writes": admit_writes, "tenant_hot_peak": peaks}
+            "admit_page_writes": admit_writes, "tenant_hot_peak": peaks,
+            "step_migration_bytes": step_mig}
 
 
 def serve_trace_for(cfg, requests: Sequence[tuple], *, slots: int,

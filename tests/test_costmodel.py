@@ -1,0 +1,293 @@
+"""The time-domain cost model (``runtime/costmodel.py``): the pricing
+identities that make it placement-consistent, the ``objective="latency"``
+planner path, the bandwidth-optimal ``alpha_migration`` policy, and the
+CostModel API surface (serialization, ``from_hw`` upgrade, deprecation of
+the ``hw=`` keyword)."""
+import dataclasses
+import json
+import math
+import warnings
+
+import pytest
+
+from repro import runtime
+from repro.core.hardware import PAPER_HM, TPU_V5E, default_cost_model
+from repro.runtime import CostModel, StepTraffic, TPU_V5E_COST
+from repro.runtime.synthetic import synthetic_profile, synthetic_serve_trace
+
+CM = TPU_V5E_COST
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synthetic_serve_trace()
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return synthetic_profile()
+
+
+# ------------------------------------------------------ pricing identities ----
+
+def test_all_fast_priced_reproduces_roofline_clock(trace):
+    """A zero-migration all-fast placement prices to exactly the legacy
+    simulator's clock, which is exactly the roofline memory/compute term."""
+    r = runtime.simulate(trace, CM, 0.2 * trace.peak_kv_bytes(), "all_fast")
+    rep = CM.price_result(r)
+    assert r.migrations == 0 and r.bytes_s2f == 0
+    assert rep.time == pytest.approx(r.time, rel=1e-12)
+    assert rep.time == pytest.approx(rep.compute_time, rel=1e-12)
+    assert rep.slowdown == pytest.approx(1.0)
+    assert len(rep.step_times) == trace.num_steps
+    assert sum(rep.step_times) == pytest.approx(rep.time)
+
+
+def test_all_fast_lower_bounds_every_policy(trace):
+    fast = 0.2 * trace.peak_kv_bytes()
+    lb = CM.price_result(runtime.simulate(trace, CM, fast, "all_fast")).time
+    for name in runtime.list_policies():
+        if name == "base":
+            continue
+        rep = CM.price_result(runtime.simulate(trace, CM, fast, name))
+        assert rep.time >= lb * (1 - 1e-9), name
+
+
+def test_step_time_monotone_in_fast_fraction():
+    """Moving any read byte from the slow tier to fast never makes the
+    predicted step slower (the roofline floor keeps the model consistent)."""
+    reads = 1e9
+    times = [CM.step_time(StepTraffic(flops=1e9, fast_read=f * reads,
+                                      slow_read=(1 - f) * reads))
+             for f in (0.0, 0.2, 0.4, 0.6, 0.8, 0.9624, 1.0)]
+    assert all(a >= b - 1e-15 for a, b in zip(times, times[1:]))
+    # and the all-fast split is exactly the all-fast floor
+    assert times[-1] == pytest.approx(
+        CM.step_time_all_fast(StepTraffic(flops=1e9, fast_read=reads)))
+
+
+def test_demand_reads_never_cheaper_than_planned():
+    """The same slow bytes priced as reactive demand misses (serialized)
+    cost at least as much as planned/streamed reads (overlapped)."""
+    planned = StepTraffic(flops=1e9, fast_read=8e8, slow_read=2e8)
+    demand = dataclasses.replace(planned, demand_read=planned.slow_read)
+    assert CM.step_time(demand) >= CM.step_time(planned)
+    # the serialized misses pay the full interface cost on top of the
+    # all-fast floor — they cannot hide behind any pipe
+    assert CM.step_time(demand) >= CM.step_time_all_fast(planned) \
+        + planned.slow_read / CM.ext_read_bw() - 1e-15
+
+
+def test_reactive_policies_record_demand_reads(trace):
+    fast = 0.2 * trace.peak_kv_bytes()
+    lru = runtime.simulate(trace, CM, fast, "lru_page")
+    sent = runtime.simulate(trace, CM, fast, "sentinel")
+    assert sum(t.demand_read for t in lru.step_traffic) == \
+        pytest.approx(sum(t.slow_read for t in lru.step_traffic))
+    assert sum(t.demand_read for t in sent.step_traffic) == 0.0
+
+
+def test_optimal_alpha():
+    """alpha* = B_fast / (B_fast + B_ext): the fast:total read split that
+    equalizes the two pipes' times."""
+    a = CM.optimal_alpha()
+    assert a == pytest.approx(819e9 / (819e9 + 32e9))
+    assert a / CM.fast_read_bw == pytest.approx((1 - a) / CM.ext_read_bw())
+    assert CostModel.from_hw(PAPER_HM).optimal_alpha() == \
+        pytest.approx(34e9 / (34e9 + 19e9))
+
+
+# ------------------------------------------------------------- API surface ----
+
+def test_cost_model_json_roundtrip():
+    d = CM.to_dict()
+    json.dumps(d)                                    # JSON-safe
+    assert CostModel.from_dict(d) == CM
+    # inf host bandwidth (the legacy interface-bound model) survives as None
+    legacy = CostModel.from_hw(TPU_V5E)
+    d2 = legacy.to_dict()
+    assert d2["host_internal_bw"] is None
+    back = CostModel.from_dict(json.loads(json.dumps(d2)))
+    assert back == legacy and math.isinf(back.host_internal_bw)
+
+
+def test_cost_model_duck_types_hwspec():
+    assert (CM.fast_bw, CM.slow_bw, CM.mig_bw) == \
+        (CM.fast_read_bw, CM.slow_read_bw, CM.mig_read_bw)
+    assert runtime.as_cost_model(CM) is CM
+    assert runtime.as_cost_model(TPU_V5E) == CostModel.from_hw(TPU_V5E)
+
+
+def test_from_hw_simulates_identically(trace):
+    """A CostModel upgraded from an HWSpec drops into every policy and
+    produces the identical PlacementResult."""
+    fast = 0.2 * trace.peak_kv_bytes()
+    cm = CostModel.from_hw(TPU_V5E)
+    for pol in ("sentinel", "lru_page", "prefer_fast", "alpha_migration"):
+        assert runtime.simulate(trace, TPU_V5E, fast, pol) == \
+            runtime.simulate(trace, cm, fast, pol)
+
+
+def test_default_cost_model_extends_tpu_constants():
+    cm = default_cost_model()
+    assert cm is TPU_V5E_COST
+    assert (cm.peak_flops, cm.fast_bw, cm.slow_bw, cm.mig_bw, cm.link_bw,
+            cm.fast_bytes, cm.mig_overhead) == \
+        (TPU_V5E.peak_flops, TPU_V5E.fast_bw, TPU_V5E.slow_bw, TPU_V5E.mig_bw,
+         TPU_V5E.link_bw, TPU_V5E.fast_bytes, TPU_V5E.mig_overhead)
+
+
+def test_price_result_requires_recorded_traffic():
+    bare = runtime.PlacementResult(policy="x", time=1.0, compute_time=1.0)
+    with pytest.raises(ValueError, match="step_traffic"):
+        CM.price_result(bare)
+
+
+# ------------------------------------------------------- deprecation shims ----
+
+def test_hw_keyword_warns_and_matches(prof, trace):
+    fast_s = 0.2 * trace.peak_kv_bytes()
+    with pytest.warns(DeprecationWarning, match="runtime.plan"):
+        old = runtime.plan(trace, fast_bytes=fast_s, hw=TPU_V5E)
+    assert old == runtime.plan(trace, TPU_V5E, fast_s)
+    fast_t = 0.3 * prof.peak_bytes()
+    with pytest.warns(DeprecationWarning, match="runtime.plan"):
+        old_t = runtime.plan(prof, fast_bytes=fast_t, hw=PAPER_HM)
+    assert old_t == runtime.plan(prof, PAPER_HM, fast_t)
+
+
+def test_offload_from_plan_hw_keyword_warns(prof):
+    from repro.core import offload
+    pl = runtime.plan(prof, PAPER_HM, 0.3 * prof.peak_bytes())
+    with pytest.warns(DeprecationWarning, match="from_plan"):
+        old = offload.from_plan(prof, pl, hw=PAPER_HM)
+    assert old == offload.from_plan(prof, pl)
+
+
+def test_both_cost_model_and_hw_is_an_error(trace):
+    with pytest.raises(TypeError, match="both"):
+        runtime.plan(trace, TPU_V5E_COST, 1e9, hw=TPU_V5E)
+
+
+def test_new_surface_does_not_warn(trace):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        runtime.plan(trace, TPU_V5E_COST, 0.2 * trace.peak_kv_bytes(),
+                     objective="latency")
+        runtime.plan(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+
+
+# -------------------------------------------------------- latency objective ----
+
+def test_invalid_objective_raises(trace):
+    with pytest.raises(ValueError, match="objective"):
+        runtime.plan(trace, TPU_V5E, 1e9, objective="zebra")
+
+
+def test_latency_plan_never_slower_than_bytes_plan(trace):
+    peak = trace.peak_kv_bytes()
+    for frac in (0.1, 0.2, 0.4, 0.8):
+        pb = runtime.plan(trace, CM, frac * peak)
+        pl = runtime.plan(trace, CM, frac * peak, objective="latency")
+        assert pl.objective == "latency" and pl.cost_model == CM
+        assert pl.predicted_time <= \
+            CM.price_result(pb.sim).time * (1 + 1e-12)
+        assert sum(pl.predicted_step_times) == \
+            pytest.approx(pl.predicted_time)
+        assert pl.predicted_decode_throughput > 0
+
+
+def test_latency_plan_training(prof):
+    cm = CostModel.from_hw(PAPER_HM)
+    fast = 0.3 * prof.peak_bytes()
+    pb = runtime.plan(prof, PAPER_HM, fast)
+    pl = runtime.plan(prof, cm, fast, objective="latency")
+    assert pl.kind == "training" and pl.objective == "latency"
+    assert pl.predicted_time <= cm.price_result(pb.sim).time * (1 + 1e-12)
+
+
+def test_bytes_objective_serialization_is_unchanged(trace):
+    """The default objective leaves plan JSON byte-compatible with every
+    pre-CostModel golden: no objective/cost_model/predicted keys at all."""
+    pl = runtime.plan(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    d = pl.to_dict()
+    assert "objective" not in d and "cost_model" not in d
+    assert "predicted_step_times" not in d
+    # while the latency plan carries all three, byte-stably
+    pl2 = runtime.plan(trace, CM, 0.2 * trace.peak_kv_bytes(),
+                       objective="latency")
+    d2 = pl2.to_dict()
+    assert d2["objective"] == "latency"
+    assert CostModel.from_dict(d2["cost_model"]) == CM
+    s = pl2.to_json()
+    back = runtime.PlacementPlan.from_json(s)
+    assert back.to_json() == s and back == pl2
+    assert back.cost_model == CM
+
+
+# ---------------------------------------------------------- alpha_migration ----
+
+def test_alpha_migration_registered_and_bracketed(trace):
+    assert "alpha_migration" in runtime.list_policies()
+    peak = trace.peak_kv_bytes()
+    af = CM.price_result(
+        runtime.simulate(trace, CM, 0.4 * peak, "all_fast")).time
+    sl = CM.price_result(
+        runtime.simulate(trace, CM, 0.4 * peak, "all_slow")).time
+    r = runtime.simulate(trace, CM, 0.4 * peak, "alpha_migration")
+    t = CM.price_result(r).time
+    assert af * (1 - 1e-9) <= t <= sl * (1 + 1e-9)
+
+
+def test_alpha_migration_defaults_to_optimal_alpha_and_clamps(trace):
+    cls = runtime.get_policy("alpha_migration")
+    tl = runtime.as_workload(trace).timeline()
+    assert cls(tl, CM, 1e9).alpha == pytest.approx(CM.optimal_alpha())
+    # a legacy HWSpec machine gets the interface-bound alpha
+    assert cls(tl, PAPER_HM, 1e9).alpha == pytest.approx(34e9 / 53e9)
+    assert cls(tl, CM, 1e9, alpha=7.0).alpha == 1.0
+    assert cls(tl, CM, 1e9, alpha=-1.0).alpha == 0.0
+
+
+# ------------------------------------------------------------- hypothesis ----
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI installs it
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(st.floats(0.05, 1.0), st.integers(2, 4), st.integers(3, 8))
+    @settings(max_examples=10, deadline=None)
+    def test_property_latency_never_slower_than_bytes(frac, slots, reqs):
+        """Whatever the trace shape or budget, the latency objective never
+        returns a plan the cost model prices slower than the bytes
+        objective's pick (the bytes winner is in the latency pool)."""
+        tr = synthetic_serve_trace(num_requests=reqs, num_slots=slots)
+        fast = frac * tr.peak_kv_bytes()
+        pb = runtime.plan(tr, CM, fast)
+        pl = runtime.plan(tr, CM, fast, objective="latency")
+        assert pl.predicted_time <= \
+            CM.price_result(pb.sim).time * (1 + 1e-12)
+
+    @given(st.floats(0.0, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 0.9))
+    @settings(max_examples=25, deadline=None)
+    def test_property_step_time_bracketed(split, mig, overlap):
+        """step_time is always >= the all-fast floor of the same reads and
+        monotone in the demand fraction, for any read split / migration
+        volume / overlap factor."""
+        cm = dataclasses.replace(CM, dma_overlap=overlap)
+        reads = 1e9
+        tr = StepTraffic(flops=1e9, fast_read=split * reads,
+                         slow_read=(1 - split) * reads,
+                         mig_in=mig * 1e8, mig_out=(1 - mig) * 1e8)
+        t = cm.step_time(tr)
+        assert t >= cm.step_time_all_fast(tr) - 1e-15
+        assert cm.step_time(dataclasses.replace(
+            tr, demand_read=tr.slow_read)) >= t - 1e-15
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (CI installs it; the "
+                             "deterministic identities above still ran)")
+    def test_property_suites_need_hypothesis():
+        pass

@@ -203,6 +203,10 @@ def test_engine_matches_simulator_counters_exactly(tenant_run):
         max_seq=tenant_run["max_seq"], page_tokens=b.page_tokens,
         row_bytes=b._row_bytes)
     assert pred["migration_bytes"] == b.sim_migration_bytes
+    # the per-decode-step series the CostModel prices: integer-exact per
+    # step, and its sum is the aggregate counter
+    assert pred["step_migration_bytes"] == b.step_migration_bytes
+    assert sum(pred["step_migration_bytes"]) == b.sim_migration_bytes
     assert pred["page_copies"] == b.pool.stats["page_copies"]
     assert pred["admit_page_writes"] == b.pool.stats["admit_page_writes"]
     assert pred["tenant_hot_peak"] == b.tenant_hot_peak

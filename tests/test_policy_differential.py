@@ -38,6 +38,7 @@ HW = HWSpec("diff", peak_flops=1e12, fast_bw=100e9, slow_bw=20e9,
 
 # knobs that make each policy deterministic and cheap on tiny workloads
 KNOBS = {"sentinel": {"lookahead": 6}, "sentinel_slo": {"lookahead": 6},
+         "alpha_migration": {"lookahead": 6},
          "lru_page": {"page_bytes": 4096}, "sentinel_mi": {"mi": 3},
          "ial": {"repeats": 2}, "lru": {"repeats": 2}}
 

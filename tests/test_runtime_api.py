@@ -119,6 +119,32 @@ def test_plan_multi_tenant_golden_fixture():
     assert not back.tenant_violations                # the SLO report card
 
 
+def test_plan_latency_golden_fixture():
+    """Checked-in golden latency plan: the time-domain objective's pick on
+    the fixed serving workload, carrying its serialized ``CostModel`` and
+    predicted step times — drift in the cost model's pricing, the latency
+    selection loop, or the new fields' serialization fails this test."""
+    import pathlib
+
+    from repro.runtime import TPU_V5E_COST
+    path = pathlib.Path(__file__).parent / "golden" / "latency_plan.json"
+    text = path.read_text().rstrip("\n")
+    back = runtime.PlacementPlan.from_json(text)
+    assert back.to_json() == text                    # byte-identical reload
+    trace = synthetic_serve_trace()
+    fresh = runtime.plan(trace, TPU_V5E_COST, 0.2 * trace.peak_kv_bytes(),
+                         objective="latency")
+    assert fresh.to_json() == text                   # no silent drift
+    assert fresh == back
+    assert back.objective == "latency"
+    assert back.cost_model == TPU_V5E_COST
+    assert back.predicted_time == pytest.approx(
+        sum(back.predicted_step_times))
+    # the prediction is reproducible from the plan's own cost model
+    assert back.cost_model.price_result(fresh.sim).time == \
+        pytest.approx(back.predicted_time)
+
+
 def test_plan_feeds_offload_engine(prof):
     """The unified plan drives the training offload config end to end."""
     from repro.core import offload
