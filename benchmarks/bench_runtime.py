@@ -15,7 +15,12 @@ Gates (exit non-zero on failure):
   - every plan — including a latency-objective plan carrying its serialized
     ``CostModel`` and predicted step times — must round-trip through
     ``PlacementPlan.to_json`` / ``from_json`` byte-identically
-    (planner-drift canary).
+    (planner-drift canary);
+  - with ``--drift``, the online re-planner (runtime/online.py) on every
+    piecewise-stationary drift workload: predicted tokens/sec ≥ the
+    static-stale plan's, regret vs the per-segment clairvoyant plan
+    sequence ≤ 10%, migration bytes ≤ 1.3x clairvoyant, and hysteresis
+    churn within budget.
 
 Every row also carries the time-domain prediction (``pred_time_s``): the
 policy's recorded per-step traffic priced on the machine's ``CostModel``.
@@ -61,6 +66,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--json", default="",
                     help="write rows + checks to this JSON file")
+    ap.add_argument("--drift", action="store_true",
+                    help="also sweep the online re-planner over the "
+                         "piecewise-stationary drift workloads and gate "
+                         "online vs static-stale vs clairvoyant")
     args = ap.parse_args(argv)
 
     prof = synthetic_profile()
@@ -118,15 +127,42 @@ def main(argv=None):
         print(f"check,{kind}_plan_json_roundtrip,bytes={len(s)},"
               f"{'OK' if stable else 'FAIL'}")
 
+    # ---- online re-planning under drift: regret vs the clairvoyant plan ----
+    drift = {}
+    if args.drift:
+        from repro.runtime import replay_drift
+        from repro.runtime.synthetic import drift_workloads
+        for name, wl in drift_workloads().items():
+            rep = replay_drift(wl, default_cost_model(),
+                               0.2 * wl.peak_kv_bytes())
+            drift[name] = rep.to_dict()
+            replans = sum(1 for e in rep.events if e.applied)
+            print(f"drift,{name},regret={rep.regret:.4f},"
+                  f"online_tok_s={rep.online_tokens_per_s:.1f},"
+                  f"static_tok_s={rep.static_tokens_per_s:.1f},"
+                  f"replans={replans},churn_mb={rep.churn_bytes / 1e6:.2f}")
+            gate(f"drift_{name}_online_vs_static", "online", "static_stale",
+                 rep.online_s, rep.static_s)
+            gate(f"drift_{name}_regret<=10%", "online", "clairvoyant*1.1",
+                 rep.online_s, (1.0 + 0.10) * rep.clairvoyant_s)
+            gate(f"drift_{name}_migration<=1.3x_clairvoyant", "online",
+                 "clairvoyant*1.3", rep.online_mig_bytes,
+                 1.3 * rep.clairvoyant_mig_bytes)
+            gate(f"drift_{name}_churn_within_budget", "churn", "budget",
+                 rep.churn_bytes, rep.churn_budget_bytes)
+
     for r in rows:
         print(",".join(map(str, r)))
     if args.json:
+        out = {"rows": [list(r) for r in rows],
+               "plans": {"training": pl_t.to_dict(),
+                         "serving": pl_s.to_dict(),
+                         "serving_latency": pl_lat.to_dict()},
+               "checks": checks}
+        if drift:
+            out["drift"] = drift
         with open(args.json, "w") as f:
-            json.dump({"rows": [list(r) for r in rows],
-                       "plans": {"training": pl_t.to_dict(),
-                                 "serving": pl_s.to_dict(),
-                                 "serving_latency": pl_lat.to_dict()},
-                       "checks": checks}, f, indent=2)
+            json.dump(out, f, indent=2)
         print(f"wrote {args.json}")
     if not ok:
         raise SystemExit("runtime benchmark gate failed (see checks above)")

@@ -26,8 +26,13 @@ Layout:
   costmodel.py CostModel / StepTraffic / CostReport — the time-domain model
                pricing each policy's recorded per-step traffic
   policies.py  the one policy registry and the PlacementResult they return
-  plan.py      runtime.plan and the serializable PlacementPlan
-  synthetic.py deterministic synthetic workloads (golden tests, benchmarks)
+  plan.py      runtime.plan and the serializable PlacementPlan (+ PlanDelta
+               incremental re-plans: apply == fresh plan, byte-for-byte)
+  online.py    the continuous profile->re-plan loop: OnlineReplanner drift
+               detection + hysteresis + elastic slot lending, and
+               replay_drift's clairvoyant-regret differential
+  synthetic.py deterministic synthetic workloads (golden tests, benchmarks,
+               piecewise-stationary drift trio)
 
 The legacy entry points (``core.planner.plan`` / ``plan_serve``,
 ``core.policies``, ``core.hmsim.simulate_*``) remain as deprecation shims —
@@ -42,25 +47,32 @@ from repro.runtime.objects import (AccessTimeline, DataObject, MemoryTier,
                                    tiers_from_hw)
 from repro.runtime.costmodel import (TPU_V5E_COST, CostModel, CostReport,
                                      StepTraffic, as_cost_model)
-from repro.runtime.plan import (Candidate, PlacementPlan, ServeCandidate,
-                                enumerate_candidates, interval_stats,
-                                mi_to_periods, plan, plan_serving,
-                                plan_training, serve_token_stats,
-                                slot_kv_weights)
+from repro.runtime.plan import (Candidate, PlacementPlan, PlanDelta,
+                                ServeCandidate, enumerate_candidates,
+                                interval_stats, mi_to_periods, plan,
+                                plan_delta, plan_serving, plan_training,
+                                serve_token_stats, slot_kv_weights)
 from repro.runtime.policies import (PAGE_BYTES, POLICIES, PlacementPolicy,
                                     PlacementResult, Unit, build_units,
                                     get_policy, list_policies,
                                     register_policy, simulate)
+from repro.runtime.online import (DriftSegment, DriftWorkload, OnlineReplanner,
+                                  OnlineReport, ReplanEvent, SegmentReport,
+                                  StepStat, WindowStats, drift_score,
+                                  plan_churn_bytes, replay_drift)
 
 __all__ = [
     "AccessTimeline", "Candidate", "CostModel", "CostReport", "DataObject",
-    "MemoryTier", "MultiTenantWorkload", "PAGE_BYTES", "POLICIES",
-    "PlacementPlan", "PlacementPolicy", "PlacementResult", "ServeCandidate",
-    "ServingWorkload", "StepTraffic", "TPU_V5E_COST", "Tenant",
-    "TrainingWorkload", "Unit", "Workload", "as_cost_model", "as_workload",
-    "build_units", "enumerate_candidates", "get_policy", "interval_stats",
-    "list_policies", "merge_tenant_traces", "mi_to_periods",
-    "normalized_quotas", "peak_object_bytes", "plan", "plan_serving",
-    "plan_training", "register_policy", "serve_token_stats", "simulate",
-    "slot_kv_weights", "tiers_from_hw",
+    "DriftSegment", "DriftWorkload", "MemoryTier", "MultiTenantWorkload",
+    "OnlineReplanner", "OnlineReport", "PAGE_BYTES", "POLICIES",
+    "PlacementPlan", "PlacementPolicy", "PlacementResult", "PlanDelta",
+    "ReplanEvent", "SegmentReport", "ServeCandidate", "ServingWorkload",
+    "StepStat", "StepTraffic", "TPU_V5E_COST", "Tenant", "TrainingWorkload",
+    "Unit", "WindowStats", "Workload", "as_cost_model", "as_workload",
+    "build_units", "drift_score", "enumerate_candidates", "get_policy",
+    "interval_stats", "list_policies", "merge_tenant_traces", "mi_to_periods",
+    "normalized_quotas", "peak_object_bytes", "plan", "plan_churn_bytes",
+    "plan_delta", "plan_serving", "plan_training", "register_policy",
+    "replay_drift", "serve_token_stats", "simulate", "slot_kv_weights",
+    "tiers_from_hw",
 ]

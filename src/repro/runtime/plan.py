@@ -39,6 +39,7 @@ artifacts.  Where each paper equation lands in the code is mapped in
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
@@ -238,6 +239,81 @@ class PlacementPlan:
     @classmethod
     def from_json(cls, s: str) -> "PlacementPlan":
         return cls.from_dict(json.loads(s))
+
+    # ------------------------------------------------------------- deltas --
+    def digest(self) -> str:
+        """Content digest of the serialized plan — the identity a
+        ``PlanDelta`` is pinned against, so deltas can only be applied to
+        the exact plan they were diffed from (and in emission order)."""
+        return hashlib.sha1(self.to_json().encode()).hexdigest()[:16]
+
+    def apply_delta(self, delta: "PlanDelta") -> "PlacementPlan":
+        """Apply an incremental re-plan.  The contract (pinned by
+        tests/test_online_replan.py): for any two plans,
+        ``old.apply_delta(plan_delta(old, new)).to_json() == new.to_json()``
+        byte-for-byte — an applied delta IS the fresh plan."""
+        if delta.base_digest and delta.base_digest != self.digest():
+            raise ValueError(
+                f"delta (step {delta.step}) was diffed against plan "
+                f"{delta.base_digest}, not {self.digest()} — apply deltas "
+                "in emission order")
+        d = self.to_dict()
+        for k in delta.removed:
+            d.pop(k, None)
+        # normalize through JSON so an in-memory delta and one reloaded from
+        # disk apply identically (tuples -> lists, int dict keys -> str; the
+        # from_dict path re-types both forms)
+        d.update(json.loads(json.dumps(delta.changes)))
+        return PlacementPlan.from_dict(d)
+
+
+@dataclass
+class PlanDelta:
+    """An incremental re-plan: only the serialized plan fields that changed.
+
+    ``changes`` maps top-level ``PlacementPlan.to_dict()`` keys to their new
+    serialized values; ``removed`` lists keys the new plan no longer
+    serializes (an objective downgrade).  ``base_digest`` pins the plan the
+    delta was diffed against — ``apply_delta`` refuses a mismatched base, so
+    a delta stream replays deterministically or not at all.  ``step`` is the
+    decode step the online replanner emitted it at and ``reason`` the drift
+    trigger (``docs/RUNTIME_API.md#online-re-planning``)."""
+    step: int = 0
+    reason: str = ""
+    base_digest: str = ""
+    changes: Dict[str, Any] = field(default_factory=dict)
+    removed: List[str] = field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return {"step": self.step, "reason": self.reason,
+                "base_digest": self.base_digest,
+                "changes": self.changes, "removed": list(self.removed)}
+
+    def to_json(self) -> str:
+        """Deterministic bytes: ``from_json(d.to_json()).to_json()`` is
+        byte-identical (the same round-trip contract plans carry)."""
+        return json.dumps(self.to_dict(), sort_keys=True, indent=2)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanDelta":
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PlanDelta":
+        return cls.from_dict(json.loads(s))
+
+
+def plan_delta(old: PlacementPlan, new: PlacementPlan, *, step: int = 0,
+               reason: str = "") -> Optional[PlanDelta]:
+    """Diff two plans into an incremental delta (None when nothing changed —
+    traffic moved but the planner landed on the same placement)."""
+    od, nd = old.to_dict(), new.to_dict()
+    changes = {k: v for k, v in nd.items() if k not in od or od[k] != v}
+    removed = sorted(k for k in od if k not in nd)
+    if not changes and not removed:
+        return None
+    return PlanDelta(step=step, reason=reason, base_digest=old.digest(),
+                     changes=changes, removed=removed)
 
 
 def _result_from_dict(d: Optional[dict]) -> Optional[PlacementResult]:

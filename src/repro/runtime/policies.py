@@ -150,6 +150,22 @@ class PlacementPolicy:
     # policies discover misses at touch time, so the cost model serializes
     # their slow reads (StepTraffic.demand_read).
     plans_ahead = False
+    # Online re-planning (runtime/online.py): a policy supports incremental
+    # ``PlacementPlan`` deltas when its entire decision state is re-derivable
+    # from the plan's knobs — the replanner can then swap plans mid-stream
+    # and the policy behaves as if it had been planned that way.  Reactive
+    # policies (LRU paging, the caching daemons) and the MI-interval engine
+    # carry history a delta cannot re-parameterize, so they opt out; the
+    # online loop refuses them up front.  See docs/POLICIES.md.
+    supports_replan = False
+
+    @classmethod
+    def replan_knobs(cls, plan) -> dict:
+        """Simulation knobs that re-parameterize this policy from a plan —
+        what the online replayer passes to ``simulate`` when pricing a
+        traffic window under ``plan``.  Meaningful only when
+        ``supports_replan`` is set."""
+        return {}
 
     def __init__(self, timeline, hw, fast_bytes: float, **knobs):
         self.timeline = timeline
@@ -389,6 +405,7 @@ class PlacementPolicy:
 class PreferFast(PlacementPolicy):
     """Static PreferHBM: fast while room remains, no migration ever."""
     plans_ahead = True       # placement is fixed -> slow reads are streamable
+    supports_replan = True   # stateless: any plan re-parameterizes it
 
 
 @register_policy("lru_page")
@@ -530,11 +547,18 @@ class SentinelLifetime(PlacementPolicy):
     """
 
     plans_ahead = True
+    # the whole decision state is (lookahead, windows) — all plan knobs, so
+    # an online delta fully re-parameterizes the policy mid-stream
+    supports_replan = True
 
     def __init__(self, timeline, hw, fast_bytes, *, lookahead: int = 8,
                  **knobs):
         super().__init__(timeline, hw, fast_bytes, **knobs)
         self.lookahead = max(1, int(lookahead))
+
+    @classmethod
+    def replan_knobs(cls, plan) -> dict:
+        return {"lookahead": int(plan.lookahead)} if plan.lookahead else {}
 
     @staticmethod
     def _next_access(o, t: int) -> Optional[int]:
@@ -1361,6 +1385,7 @@ class LRUDaemon(_CachingDaemon):
 class _Static(PlacementPolicy):
     where = "fast"
     plans_ahead = True       # fixed placement: every read is streamable
+    supports_replan = True   # stateless: a delta just re-prices it
 
     @classmethod
     def simulate(cls, workload, hw: HWSpec, fast_bytes: float,

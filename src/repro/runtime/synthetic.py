@@ -169,3 +169,101 @@ def synthetic_multi_tenant_trace(chatty_requests: int = 10,
     # prefix_id 0 is the platform-wide system prompt: the one key that is
     # genuinely shared across tenants (everything else stays namespaced)
     return MultiTenantWorkload(tenants, traces, shared_prefix_ids=(0,))
+
+
+# --------------------------------------------------- drifting traffic --
+# Piecewise-stationary workloads for the online re-planner
+# (runtime/online.py): each is a sequence of stationary segments over one
+# slot/KV geometry, with a distribution shift at every boundary.  Like
+# everything else here they are RNG-free, so the golden re-plan trace and
+# the clairvoyant-regret gates are byte-stable.
+
+def synthetic_drift_tenant_flip(num_layers: int = 8,
+                                kv_token_bytes: float = 4096):
+    """Diurnal tenant-mix flip: chatty-dominated -> bursty-dominated ->
+    chatty again.  The aggregate slot occupancy barely moves; what drifts is
+    *which tenant* the read traffic belongs to — the mix signal the
+    re-planner's per-tenant window shares exist to catch."""
+    from repro.runtime.online import DriftSegment, DriftWorkload
+    mk = lambda c, b: synthetic_multi_tenant_trace(
+        chatty_requests=c, bursty_requests=b, num_layers=num_layers,
+        kv_token_bytes=kv_token_bytes)
+    return DriftWorkload("tenant_flip", (
+        DriftSegment("chatty_heavy", mk(12, 2)),
+        DriftSegment("bursty_heavy", mk(2, 8)),
+        DriftSegment("chatty_back", mk(10, 2))))
+
+
+def synthetic_drift_prompt_shift(num_slots: int = 4, num_layers: int = 8,
+                                 kv_token_bytes: float = 4096,
+                                 weight_bytes: float = 50e6,
+                                 flops_per_token: float = 2e9):
+    """Prompt-length shift: short conversational prompts -> long analytics
+    prompts -> short again.  Per-step KV read volume grows ~5x in the middle
+    segment, so the hot windows planned on short contexts starve."""
+    from repro.core.hmsim import build_serve_trace
+    from repro.runtime.online import DriftSegment, DriftWorkload
+    geometry = dict(num_slots=num_slots, num_layers=num_layers,
+                    kv_token_bytes=kv_token_bytes, weight_bytes=weight_bytes,
+                    flops_per_token=flops_per_token)
+
+    def seg(prompt):
+        reqs = [(prompt + (i * 7) % 13, 40 + (i * 5) % 9)
+                for i in range(2 * num_slots)]
+        return build_serve_trace(reqs, **geometry)
+
+    return DriftWorkload("prompt_shift", (
+        DriftSegment("short_prompts", seg(64)),
+        DriftSegment("long_prompts", seg(320)),
+        DriftSegment("short_again", seg(64))))
+
+
+def synthetic_drift_flash_crowd(slots_per_tenant: int = 2,
+                                num_layers: int = 8,
+                                kv_token_bytes: float = 4096,
+                                weight_bytes: float = 50e6,
+                                flops_per_token: float = 2e9):
+    """Flash crowd: a tenant that is near-silent in the calm segments floods
+    the system in the middle one.  While it sleeps its batch slots sit idle
+    — the elastic-lending case: the replanner lends them to the busy tenant
+    and reclaims them when the crowd arrives."""
+    from repro.core.hmsim import build_serve_trace
+    from repro.runtime.objects import MultiTenantWorkload, Tenant
+    from repro.runtime.online import DriftSegment, DriftWorkload
+    geometry = dict(num_slots=slots_per_tenant, num_layers=num_layers,
+                    kv_token_bytes=kv_token_bytes, weight_bytes=weight_bytes,
+                    flops_per_token=flops_per_token)
+    tenants = lambda: [Tenant("steady", fast_quota_frac=0.5,
+                              slo_slack=1.1, arrival=0),
+                       Tenant("crowd", fast_quota_frac=0.5,
+                              slo_slack=2.0, arrival=0)]
+
+    def calm(n_steady):
+        steady = [(96 + (i * 7) % 13, 16 + (i * 5) % 9, 0)
+                  for i in range(n_steady)]
+        crowd = [(32, 6, 0)]                 # one straggler, then silence
+        return MultiTenantWorkload(tenants(), [
+            build_serve_trace(steady, **geometry),
+            build_serve_trace(crowd, **geometry)])
+
+    def surge():
+        steady = [(96 + (i * 7) % 13, 16 + (i * 5) % 9, 0)
+                  for i in range(4)]
+        crowd = [(160 + (i * 31) % 29, 24 + (i * 13) % 11, 0)
+                 for i in range(12)]
+        return MultiTenantWorkload(tenants(), [
+            build_serve_trace(steady, **geometry),
+            build_serve_trace(crowd, **geometry)])
+
+    return DriftWorkload("flash_crowd", (
+        DriftSegment("calm", calm(8)),
+        DriftSegment("surge", surge()),
+        DriftSegment("calm_again", calm(8))))
+
+
+def drift_workloads() -> dict:
+    """The canonical piecewise-stationary trio the differential suite and
+    ``bench_runtime --drift`` replay."""
+    return {w.name: w for w in (synthetic_drift_tenant_flip(),
+                                synthetic_drift_prompt_shift(),
+                                synthetic_drift_flash_crowd())}

@@ -120,8 +120,13 @@ class ContinuousBatcher:
         # per-decode-step deltas of sim_migration_bytes (admission + boundary
         # demotions attributed to the step that performed them): the engine's
         # replayed traffic series, priced by a CostModel and matched
-        # integer-exactly by predict_pool_counters()["step_migration_bytes"]
+        # integer-exactly by predict_pool_counters()["step_migration_bytes"].
+        # The series is tracked against a persistent high-water marker, not a
+        # per-step local, so bytes moved BETWEEN steps (apply_plan adopting a
+        # re-plan) land in the next step's entry instead of vanishing —
+        # sum(step_migration_bytes) == sim_migration_bytes always.
         self.step_migration_bytes: list = []
+        self._mig_accounted = 0.0
         self.paged = self.tiered = self.caches = self.ptable = None
         self.pool = None
         if paged:
@@ -326,7 +331,6 @@ class ContinuousBatcher:
         all boundary/length bookkeeping runs on host-side mirrors.  Layout
         work happens only at events (admit, a slot growing into a new page,
         a boundary advance)."""
-        mig0 = self.sim_migration_bytes
         self._admit()
         if not any(self.active):
             return False
@@ -413,8 +417,72 @@ class ContinuousBatcher:
                 self.active[slot] = False
         if self.active != was_active:
             self._refresh_active()
-        self.step_migration_bytes.append(self.sim_migration_bytes - mig0)
+        self.step_migration_bytes.append(
+            self.sim_migration_bytes - self._mig_accounted)
+        self._mig_accounted = self.sim_migration_bytes
         return True
+
+    def apply_plan(self, new_plan):
+        """Adopt a re-plan (or an incremental ``runtime.PlanDelta``) on the
+        live pools layout, between decode steps.
+
+        The online replanner (``runtime/online.py``) emits deltas; applying
+        one here re-targets every active slot's cold boundary under the new
+        plan's hot windows through the page-table version machinery — page-
+        grain demotions, refcount-aware, zero copies for twin-deduped shared
+        pages — and re-partitions slot tenancy for subsequent admissions.
+        Grown windows cost nothing (cold pages are never promoted back).
+        Returns the migration bytes moved; they are attributed to the *next*
+        decode step's ``step_migration_bytes`` entry, exactly as
+        ``predict_pool_counters(..., plan_schedule=...)`` replays it."""
+        if self.pool is None:
+            raise ValueError("apply_plan requires the persistent-pools "
+                             "layout (use_paged_decode=True)")
+        if hasattr(new_plan, "changes"):       # a PlanDelta, not a plan
+            new_plan = self.plan.apply_delta(new_plan)
+        page = max(1, new_plan.page_tokens)
+        if self.max_seq % page:
+            page = next(p for p in range(page, 0, -1)
+                        if self.max_seq % p == 0)
+        if page != self.page_tokens:
+            raise ValueError(
+                f"re-plan changes page geometry ({page} != "
+                f"{self.page_tokens} tokens/page) — pools cannot be "
+                "re-paged in place")
+        tenants = getattr(new_plan, "slot_tenants", None)
+        if tenants and len(tenants) != self.B:
+            raise ValueError(
+                f"slot_tenants has {len(tenants)} entries for {self.B} "
+                f"batch slots (plan/batch geometry mismatch)")
+        self.plan = new_plan
+        if tenants:
+            self.slot_tenants = list(tenants)
+        mig0 = self.sim_migration_bytes
+        for s in range(self.B):
+            if not self.active[s]:
+                continue                       # freed on its next admit
+            target = self._slot_cold_target(s, self._host_len[s])
+            while self.ptable.cold_tokens(s) < target:
+                if self.pool.demote_boundary(s):
+                    self.sim_migration_bytes += \
+                        self.page_tokens * self._row_bytes
+        # tenancy may have moved without a table event — force a resample
+        self._tenant_note_version = -1
+        self._note_tenant_pages()
+        return self.sim_migration_bytes - mig0
+
+    def counters(self) -> dict:
+        """The live counter export the online replanner profiles: the
+        migration totals/series priced by the ``CostModel``, per-tenant hot-
+        pool peaks, the pools' event counters, and the page-table layout
+        version — the same shape ``predict_pool_counters`` predicts."""
+        out = {"sim_migration_bytes": self.sim_migration_bytes,
+               "step_migration_bytes": list(self.step_migration_bytes),
+               "tenant_hot_peak": dict(self.tenant_hot_peak),
+               "table_version": self.ptable.version if self.ptable else 0}
+        if self.pool is not None:
+            out.update(self.pool.stats)
+        return out
 
     def run(self):
         results = []
@@ -430,7 +498,8 @@ class ContinuousBatcher:
 
 def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                           max_seq: int, page_tokens: int, row_bytes: float,
-                          slot_tenants=None) -> dict:
+                          slot_tenants=None,
+                          plan_schedule: Sequence[tuple] = ()) -> dict:
     """Pure-Python replay of the pools-layout batcher's bookkeeping: given
     the request stream ``[(prompt_tokens, decode_tokens[, tenant]), ...]``
     and a plan, predict ``sim_migration_bytes`` (total and the per-decode-
@@ -447,7 +516,17 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
     free slots (FIFO within each tenant), write-page growth for every active
     slot, then per-slot cold-boundary demotions toward the plan's target;
     peaks are sampled after each admission and after each step's demotions,
-    the same points the engine samples."""
+    the same points the engine samples.
+
+    ``plan_schedule`` makes the replay *segment-aware* for online
+    re-planning: ``[(step, new_plan_or_delta), ...]`` means "the engine
+    called ``apply_plan`` before decode step ``step``".  The replay switches
+    plans at exactly that point — re-targeting active slots' cold boundaries
+    and re-partitioning slot tenancy — and, like the engine's marker-based
+    accounting, attributes the re-layout bytes to that step's
+    ``step_migration_bytes`` entry, so the two stay integer-identical
+    across a re-plan boundary (sum of the series == the total on both
+    sides)."""
     pg = page_tokens
     if slot_tenants is None and plan is not None:
         slot_tenants = getattr(plan, "slot_tenants", None)
@@ -489,8 +568,26 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
             mig += pg * row_bytes
             copies += 1
 
+    schedule = sorted(((int(t), p) for t, p in plan_schedule),
+                      key=lambda e: e[0])
     while queue or any(active):
         mig0 = mig
+        while schedule and schedule[0][0] <= len(step_mig):
+            _, nxt = schedule.pop(0)       # ContinuousBatcher.apply_plan
+            if hasattr(nxt, "changes"):    # a PlanDelta, not a plan
+                nxt = plan.apply_delta(nxt)
+            plan = nxt
+            tenants = getattr(plan, "slot_tenants", None)
+            if tenants:
+                if len(tenants) != slots:
+                    raise ValueError(
+                        f"slot_tenants has {len(tenants)} entries for "
+                        f"{slots} slots (plan/batch geometry mismatch)")
+                slot_tenants = list(tenants)
+            for s in range(slots):
+                if active[s]:
+                    demote_to(s, plan.cold_len_slot(s, host_len[s], pg))
+            note()
         for s in range(slots):             # ContinuousBatcher._admit
             if active[s] or not queue:
                 continue
