@@ -38,8 +38,14 @@ bytes strictly below the unshared run at 20% fast memory.  ``--tenants``
 runs the adversarial multi-tenant SLO mix and gates ``sentinel_slo`` at
 zero per-tenant quota violations (exactly where the tenant-blind
 ``sentinel`` violates at least one tenant's guarantee) with aggregate
-migration bytes within 1.2x of the blind run.  ``--json`` publishes every
-row (and the gate verdicts) for trend tracking across PRs.
+migration bytes within 1.2x of the blind run.  ``--disagg`` runs the
+prefill/decode disaggregation gates: the ``DisaggregatedEngine`` must
+emit bit-identical tokens to the single-device pools engine with zero
+steady-state re-packs, its cross-device migration ledger must equal the
+planner's predicted edge traffic integer-exactly, and ``price_disagg``
+must show disaggregated tokens/sec at or above colocated at equal total
+HBM under a prefill-heavy mix.  ``--json`` publishes every row (and the
+gate verdicts) for trend tracking across PRs.
 """
 from __future__ import annotations
 
@@ -324,6 +330,87 @@ def run_paged_smoke(arch: str = ARCH):
     return rows, (match, max(bytes_p, bytes_k), bytes_c)
 
 
+def run_disagg(arch: str = ARCH):
+    """Prefill/decode disaggregation: the real engine pair plus the
+    planner-side throughput model.
+
+    (c) ``DisaggregatedEngine`` must emit bit-identical tokens to the
+        single-device ``ContinuousBatcher`` in the pools layout with zero
+        steady-state re-packs; (b) its cross-device migration ledger must
+        equal ``predict_pool_counters``'s predicted edge traffic exactly;
+        (a) ``price_disagg`` must show disaggregated tokens/sec at or above
+        colocated at equal total HBM under a prefill-heavy mix.
+
+    Returns rows and the verdict tuple
+    ``(match, repacks, xdev_actual, xdev_pred, tok_s_disagg, tok_s_coloc)``.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.hardware import default_cost_model
+    from repro.models import model
+    from repro.models.layers import split_params
+    from repro.serve import engine
+    from repro.serve.disagg import DisaggregatedEngine, price_disagg
+    from repro.serve.engine import predict_pool_counters
+
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              use_paged_decode=True)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    max_seq, slots = 32, 2
+    requests = [(7, 6), (9, 5), (6, 7), (8, 6)]
+    trace = serve_trace_for(get_config(arch), requests, slots=slots,
+                            layer_group=8)
+    plan = runtime.plan(trace, TPU_V5E, 0.2 * trace.peak_kv_bytes())
+    plan = dataclasses.replace(plan, hot_window=max_seq // 2,
+                               slot_hot_windows=[4, 8], page_tokens=4)
+
+    def drive(eng_cls, **kw):
+        b = eng_cls(params, cfg, slots, max_seq, plan=plan, **kw)
+        key = jax.random.PRNGKey(3)
+        for plen, d in requests:
+            key, sub = jax.random.split(key)
+            b.submit(jax.random.randint(sub, (plen,), 0,
+                                        cfg.vocab_size).astype(jnp.int32), d)
+        return b.run(), b
+
+    out_c, _ = drive(engine.ContinuousBatcher, paged=True)
+    out_d, bd = drive(DisaggregatedEngine)
+    match = out_c == out_d
+    repacks = bd.counters()["repacks"]
+    xdev = bd.xdev_migration_bytes
+    pred = predict_pool_counters(requests, plan, slots=slots,
+                                 max_seq=max_seq,
+                                 page_tokens=bd.page_tokens,
+                                 row_bytes=bd._row_bytes)
+    xdev_pred = pred["xdev_migration_bytes"]
+
+    # (a) the planner-side throughput model on a prefill-heavy mix: long
+    # prompts, short decodes — the regime disaggregation exists for
+    heavy = [(480, 24), (512, 16), (448, 32), (500, 20)]
+    htrace = serve_trace_for(get_config(arch), heavy, slots=len(heavy),
+                             layer_group=8)
+    priced = price_disagg(htrace, default_cost_model(),
+                          0.2 * htrace.peak_kv_bytes())
+    tok_c = priced["colocated"].tokens_per_s
+    tok_d = priced["disagg"].tokens_per_s
+
+    rows = [("bench_serve_disagg", "metric", "value"),
+            ("bench_serve_disagg", "tokens_match", match),
+            ("bench_serve_disagg", "repacks", repacks),
+            ("bench_serve_disagg", "xdev_migration_kb",
+             round(xdev / 1e3, 3)),
+            ("bench_serve_disagg", "xdev_predicted_kb",
+             round(xdev_pred / 1e3, 3)),
+            ("bench_serve_disagg", "edge_stream_mb",
+             round(priced["edge_bytes"] / 1e6, 4)),
+            ("bench_serve_disagg", "colocated_tok_s", round(tok_c, 1)),
+            ("bench_serve_disagg", "disagg_tok_s", round(tok_d, 1))]
+    return rows, (match, repacks, xdev, xdev_pred, tok_d, tok_c)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--arch", default=ARCH)
@@ -349,6 +436,13 @@ def main(argv=None):
                          "sentinel_slo at zero quota violations (where "
                          "tenant-blind sentinel violates) with migration "
                          "bytes within 1.2x, at 20%% fast memory")
+    ap.add_argument("--disagg", action="store_true",
+                    help="also run the prefill/decode disaggregation gates: "
+                         "bit-identical tokens vs the single-device engine "
+                         "with zero re-packs, cross-device migration bytes "
+                         "equal to the planner's predicted edge traffic, "
+                         "and disaggregated tokens/sec at or above "
+                         "colocated at equal total HBM (prefill-heavy mix)")
     ap.add_argument("--json", default="",
                     help="write rows + verdicts to this JSON file")
     args = ap.parse_args(argv)
@@ -496,11 +590,34 @@ def main(argv=None):
                   f"mig={mig_slo / 1e6:.4f}/{mig_blind / 1e6:.4f}MB,"
                   f"{'OK' if t_ok else 'FAIL'}")
 
+    disagg_rows = []
+    if args.disagg:
+        drows, (match, repacks, xdev, xdev_pred, tok_d, tok_c) = \
+            run_disagg(args.arch)
+        disagg_rows += drows
+        for r in drows:
+            print(",".join(map(str, r)))
+        d_ok = match and repacks == 0 and xdev == xdev_pred \
+            and tok_d >= tok_c
+        ok &= d_ok
+        checks.append({"check": "disagg",
+                       "tokens_match": match,
+                       "repacks": repacks,
+                       "xdev_migration_kb": round(xdev / 1e3, 3),
+                       "xdev_predicted_kb": round(xdev_pred / 1e3, 3),
+                       "disagg_tok_s": round(tok_d, 1),
+                       "colocated_tok_s": round(tok_c, 1),
+                       "status": "OK" if d_ok else "FAIL"})
+        print(f"check,disagg,match={match},repacks={repacks},"
+              f"xdev={xdev / 1e3:.3f}/{xdev_pred / 1e3:.3f}kB,"
+              f"tok_s={tok_d:.1f}/{tok_c:.1f},"
+              f"{'OK' if d_ok else 'FAIL'}")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": [list(r) for r in
                                 rows + latency_rows + paged_rows
-                                + shared_rows + tenant_rows],
+                                + shared_rows + tenant_rows + disagg_rows],
                        "checks": checks}, f, indent=2)
         print(f"wrote {args.json}")
 

@@ -28,3 +28,23 @@ def make_rules(mesh, *, kind: str = "train", fsdp: bool = False,
         return shd.tp_dp_rules(mesh, fsdp=fsdp, seq_parallel=seq_parallel,
                                dp_only=dp_only)
     return shd.serve_rules(mesh, seq_shard=seq_shard)
+
+
+def disagg_groups(devices=None):
+    """Split the available devices into (prefill, decode) groups for
+    prefill/decode disaggregation (``serve/disagg.py``).
+
+    Decode takes the *leading* half — it owns the resident KV pools and
+    the default device, where every array the engine materializes without
+    an explicit placement lands — and gets the larger share on odd counts.
+    Prefill takes the trailing half.  With a single device both groups
+    alias it, so the disaggregated engine runs degenerately on any machine
+    (the CPU test environment sees exactly one device).  Pass a
+    ``jax.sharding.Mesh`` to group its devices instead."""
+    if hasattr(devices, "devices"):                  # a Mesh
+        devices = list(devices.devices.flatten())
+    devices = list(devices) if devices is not None else jax.devices()
+    if len(devices) == 1:
+        return devices, devices
+    half = (len(devices) + 1) // 2
+    return devices[half:], devices[:half]

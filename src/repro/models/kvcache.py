@@ -477,6 +477,199 @@ class PageTable:
             assert self._twin_of.get(twin) == src
 
 
+class MeshPageTable:
+    """N per-device ``PageTable``s under one global logical slot namespace.
+
+    The tier-graph runtime's allocator view of a device mesh: device ``d``'s
+    hot pool is its own HBM, its cold pool a region of the one shared host
+    memory.  Global slot ids are ``gslot = offset[d] + local_slot`` (offsets
+    cumulative over per-device slot counts), so every logical slot names
+    exactly one ``(device, slot)`` pair — the namespace-uniqueness
+    invariant the property suite holds.
+
+    Intra-device operations (alloc/share/cow/demote/free) delegate to the
+    owning table unchanged, keeping all its refcount/CoW/twin semantics.
+    ``migrate_slot`` is the new first-class tier transition: a slot's pages
+    move to a slot on another device, hot pages crossing the device↔device
+    edge, cold pages re-homing *inside* host memory (their bytes never touch
+    a device link).  A shared page's mover pays a full private copy on the
+    destination — the source physical page lives on for its remaining
+    sharers (refcounts preserved, CoW memos cleaned by ``_release``) — so
+    after migration every migrated page is exclusive.
+
+    Byte conservation: every migrated page's payload is attributed to
+    exactly one ledger entry — ``edge_bytes[(src_dev, dst_dev)]`` for hot
+    pages, ``host_internal_bytes`` for cold — and the per-device
+    ``bytes_out``/``bytes_in`` ledgers must always equal the edge sums
+    (asserted by ``check()``).
+    """
+
+    def __init__(self, tables, names=None, page_bytes: float = 1.0):
+        if not tables:
+            raise ValueError("MeshPageTable needs at least one PageTable")
+        self.tables = list(tables)
+        self.names = list(names) if names is not None else \
+            [f"dev{d}" for d in range(len(self.tables))]
+        if len(self.names) != len(self.tables):
+            raise ValueError(f"{len(self.tables)} tables but "
+                             f"{len(self.names)} names")
+        if len(set(self.names)) != len(self.names):
+            raise ValueError(f"duplicate device names: {self.names}")
+        pts = {t.page_tokens for t in self.tables}
+        if len(pts) != 1:
+            raise ValueError(f"tables disagree on page_tokens: {pts}")
+        self.page_tokens = pts.pop()
+        self.page_bytes = float(page_bytes)
+        self.offsets = [0]
+        for t in self.tables:
+            self.offsets.append(self.offsets[-1] + t.slots)
+        self.edge_bytes: Dict[tuple, float] = {}
+        self.host_internal_bytes = 0.0
+        self.bytes_out = {n: 0.0 for n in self.names}
+        self.bytes_in = {n: 0.0 for n in self.names}
+
+    # ------------------------------------------------------ the namespace --
+    @property
+    def num_devices(self) -> int:
+        return len(self.tables)
+
+    @property
+    def slots(self) -> int:
+        """Global logical slots across the mesh."""
+        return self.offsets[-1]
+
+    def gslot(self, dev: int, slot: int) -> int:
+        if not 0 <= slot < self.tables[dev].slots:
+            raise ValueError(f"device {dev}: no slot {slot}")
+        return self.offsets[dev] + slot
+
+    def owner(self, gslot: int) -> tuple:
+        """The unique ``(device, local_slot)`` a global slot names."""
+        if not 0 <= gslot < self.slots:
+            raise ValueError(f"global slot {gslot} outside [0, {self.slots})")
+        for d in range(len(self.tables)):
+            if gslot < self.offsets[d + 1]:
+                return d, gslot - self.offsets[d]
+        raise AssertionError("unreachable")
+
+    def _at(self, gslot: int):
+        d, s = self.owner(gslot)
+        return self.tables[d], d, s
+
+    # ------------------------------------------- delegated intra-device ops --
+    def n_pages(self, gslot: int) -> int:
+        t, _, s = self._at(gslot)
+        return t.n_pages[s]
+
+    def cold_pages(self, gslot: int) -> int:
+        t, _, s = self._at(gslot)
+        return t.cold_pages(s)
+
+    def refcount(self, gslot: int, page_idx: int) -> int:
+        t, _, s = self._at(gslot)
+        return t.refcount(s, page_idx)
+
+    def alloc(self, gslot: int, tier: int) -> int:
+        t, _, s = self._at(gslot)
+        return t.alloc(s, tier)
+
+    def share(self, dst: int, src: int, n: int) -> int:
+        """Prefix sharing — intra-device only: a shared physical page can
+        only be mapped by slots on the device whose pool holds it."""
+        td, dd, sd = self._at(dst)
+        ts, ds, ss = self._at(src)
+        if dd != ds:
+            raise ValueError(
+                f"share across devices ({self.names[ds]} -> "
+                f"{self.names[dd]}): physical pages cannot alias across "
+                "HBMs — migrate_slot copies instead")
+        return td.share(sd, ss, n)
+
+    def cow(self, gslot: int, page_idx: int):
+        t, _, s = self._at(gslot)
+        return t.cow(s, page_idx)
+
+    def demote(self, gslot: int, page_idx: int) -> tuple:
+        t, _, s = self._at(gslot)
+        return t.demote(s, page_idx)
+
+    def free_slot(self, gslot: int) -> int:
+        t, _, s = self._at(gslot)
+        return t.free_slot(s)
+
+    # -------------------------------------------- the cross-device transition --
+    def migrate_slot(self, src: int, dst: int) -> dict:
+        """Move every page of global slot ``src`` to global slot ``dst`` on
+        another device, appending after ``dst``'s existing pages (a shared
+        prefix admitted on the destination stays put; only the private tail
+        crosses).  Tiers are preserved per page.  Validates capacity and the
+        destination's cold-prefix invariant up front, so it either moves the
+        whole slot or raises without mutating.  Returns the accounting
+        summary ``{"pages", "hot_bytes", "cold_bytes"}``."""
+        st, sd, ss = self._at(src)
+        dt, dd, ds = self._at(dst)
+        if sd == dd:
+            raise ValueError(f"migrate_slot within device "
+                             f"{self.names[sd]}: use share/splice instead")
+        n = st.n_pages[ss]
+        n_cold = st.cold_pages(ss)
+        n_hot = n - n_cold
+        if dt.n_pages[ds] + n > dt.pages_per_slot:
+            raise ValueError(f"dst slot {ds} on {self.names[dd]}: "
+                             f"{dt.n_pages[ds]}+{n} pages exceed "
+                             f"pages_per_slot {dt.pages_per_slot}")
+        if n_cold and dt.n_pages[ds] > dt.cold_pages(ds):
+            raise ValueError(f"dst slot {ds} on {self.names[dd]}: cold "
+                             "pages would land above its hot pages")
+        if len(dt.hot_free) < n_hot or len(dt.cold_free) < n_cold:
+            raise ValueError(f"{self.names[dd]}: pool exhausted "
+                             f"(need {n_hot} hot / {n_cold} cold)")
+        for i in range(n):
+            tier = st.tier[ss][i]
+            dt.alloc(ds, tier)     # the caller copies pool data per page
+            if tier == 0:
+                self.edge_bytes[(self.names[sd], self.names[dd])] = \
+                    self.edge_bytes.get(
+                        (self.names[sd], self.names[dd]), 0.0) \
+                    + self.page_bytes
+                self.bytes_out[self.names[sd]] += self.page_bytes
+                self.bytes_in[self.names[dd]] += self.page_bytes
+            else:
+                # cold pools are regions of the one host memory: re-homing
+                # copies inside it, no device link is touched
+                self.host_internal_bytes += self.page_bytes
+        st.free_slot(ss)
+        return {"pages": n,
+                "hot_bytes": n_hot * self.page_bytes,
+                "cold_bytes": n_cold * self.page_bytes}
+
+    # ----------------------------------------------------------- invariants --
+    def pages_in_use(self) -> int:
+        return sum(t.pages_in_use() for t in self.tables)
+
+    def check(self) -> None:
+        """Per-device structural invariants plus the mesh ledgers: every
+        byte that left a device landed on exactly one edge."""
+        for t in self.tables:
+            t.check()
+        out_sum = {n: 0.0 for n in self.names}
+        in_sum = {n: 0.0 for n in self.names}
+        for (s, d), b in self.edge_bytes.items():
+            assert s in out_sum and d in in_sum, f"edge {(s, d)} names an " \
+                f"unknown device"
+            assert b >= 0, f"edge {(s, d)}: negative bytes"
+            out_sum[s] += b
+            in_sum[d] += b
+        for name in self.names:
+            assert out_sum[name] == self.bytes_out[name], \
+                f"{name}: {self.bytes_out[name]} bytes departed but " \
+                f"{out_sum[name]} attributed to edges"
+            assert in_sum[name] == self.bytes_in[name], \
+                f"{name}: {self.bytes_in[name]} bytes arrived but " \
+                f"{in_sum[name]} attributed to edges"
+        assert self.host_internal_bytes >= 0
+
+
 def copy_slot_rows(dst_tree, src_tree, slot: int, lo: int, hi: int,
                    max_seq: int):
     """dst[slot, lo:hi] = src[slot, lo:hi] on every seq-dim leaf; None and

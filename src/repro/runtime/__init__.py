@@ -25,6 +25,11 @@ Layout:
                (+ the TraceProfile / ServeTrace adapters)
   costmodel.py CostModel / StepTraffic / CostReport — the time-domain model
                pricing each policy's recorded per-step traffic
+  tiergraph.py TierGraph / TierEdge / GraphHW — the memory system as a
+               directed graph of tiers with per-edge bandwidths; every
+               policy runs on any graph via the two-tier fold
+               (``plan(..., tier_graph=)``, the fast/slow pair is the
+               trivial instance)
   policies.py  the one policy registry and the PlacementResult they return
   plan.py      runtime.plan and the serializable PlacementPlan (+ PlanDelta
                incremental re-plans: apply == fresh plan, byte-for-byte)
@@ -47,6 +52,7 @@ from repro.runtime.objects import (AccessTimeline, DataObject, MemoryTier,
                                    tiers_from_hw)
 from repro.runtime.costmodel import (TPU_V5E_COST, CostModel, CostReport,
                                      StepTraffic, as_cost_model)
+from repro.runtime.tiergraph import GraphHW, TierEdge, TierGraph
 from repro.runtime.plan import (Candidate, PlacementPlan, PlanDelta,
                                 ServeCandidate, enumerate_candidates,
                                 interval_stats, mi_to_periods, plan,
@@ -66,8 +72,9 @@ __all__ = [
     "DriftSegment", "DriftWorkload", "MemoryTier", "MultiTenantWorkload",
     "OnlineReplanner", "OnlineReport", "PAGE_BYTES", "POLICIES",
     "PlacementPlan", "PlacementPolicy", "PlacementResult", "PlanDelta",
-    "ReplanEvent", "SegmentReport", "ServeCandidate", "ServingWorkload",
-    "StepStat", "StepTraffic", "TPU_V5E_COST", "Tenant", "TrainingWorkload",
+    "GraphHW", "ReplanEvent", "SegmentReport", "ServeCandidate",
+    "ServingWorkload", "StepStat", "StepTraffic", "TPU_V5E_COST", "Tenant",
+    "TierEdge", "TierGraph", "TrainingWorkload",
     "Unit", "WindowStats", "Workload", "as_cost_model", "as_workload",
     "build_units", "drift_score", "enumerate_candidates", "get_policy",
     "interval_stats", "list_policies", "merge_tenant_traces", "mi_to_periods",

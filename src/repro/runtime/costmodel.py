@@ -225,14 +225,77 @@ class CostModel:
                           tokens=int(sum(tr.tokens for tr in traffic)),
                           step_times=step_times)
 
-    def price_result(self, result) -> CostReport:
-        """Price a ``PlacementResult`` through its recorded traffic."""
+    def price_result(self, result, tier_graph=None) -> CostReport:
+        """Price a ``PlacementResult`` through its recorded traffic.
+
+        With ``tier_graph`` the series is priced per *edge*: each step's
+        time is the pipe maximum over the scalar pipes AND every graph
+        edge's attributed bytes over that edge's bandwidth (see
+        ``price_on_graph``)."""
         traffic = getattr(result, "step_traffic", None)
         if traffic is None:
             raise ValueError(
                 f"result for policy {result.policy!r} carries no "
                 "step_traffic (was it built by runtime.simulate?)")
-        return self.price(traffic)
+        if tier_graph is None:
+            return self.price(traffic)
+        return self.price_on_graph(traffic, tier_graph,
+                                   getattr(result, "edge_traffic", None))
+
+    def price_on_graph(self, traffic: Sequence[StepTraffic], tier_graph,
+                       edge_traffic: Optional[Sequence[dict]] = None,
+                       compute: Optional[str] = None) -> CostReport:
+        """Per-edge pricing: fold each step's channels onto graph edges and
+        take the pipe maximum across them.
+
+        The migration channels ride the spill<->compute path (promotions on
+        spill->compute, demotions on compute->spill, the DMA-overlapped
+        visible fraction only — exactly the terms ``step_time`` already
+        prices inside ``T_ext``, so a canonical two-tier graph prices
+        byte-identically to ``price``).  ``edge_traffic`` optionally adds
+        per-step ``{(src, dst): bytes}`` flows the two-tier fold cannot
+        see — cross-device KV streaming on the dev<->dev link — each priced
+        at ``path_bw(src, dst)`` as its own pipe (a transfer engine running
+        behind compute, surfacing only when it is the bottleneck)."""
+        # attribute the mig channels to the unbounded (host-like) tier when
+        # the graph has one — demotion targets capacity-free memory — and
+        # fall back to the view's widest-path spill otherwise.  On the
+        # canonical two-tier graph both pick "slow", keeping the pricing
+        # byte-identical to ``price``.
+        compute_name = compute or tier_graph.nodes[0].name
+        spill = next((n.name for n in tier_graph.nodes
+                      if n.capacity is None and n.name != compute_name),
+                     None)
+        view = tier_graph.hw_view(self, compute=compute, spill=spill)
+
+        def pipe(nbytes, src, dst):
+            bw = tier_graph.path_bw(src, dst)
+            if bw <= 0:
+                raise ValueError(f"no path {src} -> {dst} in the tier "
+                                 f"graph for {nbytes:.0f} attributed bytes")
+            return nbytes / bw
+
+        step_times = []
+        for t, tr in enumerate(traffic):
+            pipes = [self.step_time(tr)]
+            vin = tr.mig_in * (1.0 - self.dma_overlap)
+            vout = tr.mig_out * (1.0 - self.dma_overlap)
+            if vin:
+                pipes.append(pipe(vin, view.spill, view.compute))
+            if vout:
+                pipes.append(pipe(vout, view.compute, view.spill))
+            flows = (edge_traffic[t] if edge_traffic is not None
+                     and t < len(edge_traffic) else None)
+            if flows:
+                for (src, dst), nbytes in flows.items():
+                    if nbytes:
+                        pipes.append(pipe(nbytes, src, dst))
+            step_times.append(max(pipes))
+        return CostReport(time=sum(step_times),
+                          compute_time=sum(self.step_time_all_fast(tr)
+                                           for tr in traffic),
+                          tokens=int(sum(tr.tokens for tr in traffic)),
+                          step_times=step_times)
 
     # --------------------------------------------------------------- json --
     def to_dict(self) -> dict:

@@ -35,17 +35,29 @@ from repro.core.hardware import HWSpec
 
 @dataclass(frozen=True)
 class MemoryTier:
-    """One memory tier. ``capacity`` None means unbounded (the slow tier)."""
+    """One memory tier. ``capacity`` None means unbounded (the slow tier).
+
+    ``bandwidth`` is the *read* bandwidth compute sees against this tier
+    (the roofline denominator) — NOT the rate of moving data in or out of
+    it.  The two-tier model historically conflated the two through
+    ``hw.mig_bw``; transfer rates are a property of the link, carried by
+    ``tiergraph.TierEdge`` and sourced from the ``CostModel`` migration
+    fields (``mig_read_bw``/``mig_write_bw``/``link_bw``).
+    """
     name: str
-    bandwidth: float                 # read bandwidth, B/s
+    bandwidth: float                 # read bandwidth, B/s (see docstring)
     capacity: Optional[float] = None
 
 
 def tiers_from_hw(hw: HWSpec, fast_bytes: float) -> List[MemoryTier]:
     """The two-tier model every policy assumes: fast (HBM / near DRAM,
-    capacity-limited) over slow (host / far DRAM, unbounded)."""
-    return [MemoryTier("fast", hw.fast_bw, float(fast_bytes)),
-            MemoryTier("slow", hw.slow_bw, None)]
+    capacity-limited) over slow (host / far DRAM, unbounded).
+
+    Since the tier-graph generalization this is the trivial 2-node
+    ``TierGraph`` instance — the node list is byte-identical to what this
+    helper always returned."""
+    from repro.runtime.tiergraph import TierGraph   # avoid import cycle
+    return TierGraph.two_tier(hw, fast_bytes).tiers
 
 
 @dataclass

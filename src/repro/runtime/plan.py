@@ -78,6 +78,32 @@ def _check_objective(objective: str, caller: str) -> None:
                          f"expected one of {OBJECTIVES}")
 
 
+def _graph_fold(cm, tier_graph, fast_bytes):
+    """Resolve the machine the simulations run on.  With a ``tier_graph``
+    the policies see its two-tier fold (``TierGraph.hw_view`` — on the
+    canonical fast/slow graph the fold IS ``cm``, value for value), and a
+    missing ``fast_bytes`` defaults to the compute node's capacity."""
+    if tier_graph is None:
+        return cm, fast_bytes
+    view = tier_graph.hw_view(cm)
+    if fast_bytes is None:
+        cap = tier_graph.capacity(view.compute)
+        if cap is None:
+            raise ValueError("plan(tier_graph=...) needs fast_bytes when "
+                             "the compute tier is unbounded")
+        fast_bytes = float(cap)
+    return view, fast_bytes
+
+
+def _graph_dict(tier_graph, cm, fast_bytes):
+    """The plan's serialized topology: None for the canonical two-tier
+    graph (already described by ``tiers``/``cost_model``; keeps golden
+    JSONs byte-identical), the full node/edge dict otherwise."""
+    if tier_graph is None or tier_graph.matches_two_tier(cm, fast_bytes):
+        return None
+    return tier_graph.to_dict()
+
+
 # ================================================================ candidates ==
 
 @dataclass
@@ -153,6 +179,12 @@ class PlacementPlan:
     objective: str = "bytes"
     cost_model: Optional[CostModel] = None
     predicted_step_times: Optional[List[float]] = None
+    # ---- tier-graph half (``runtime.plan(..., tier_graph=)``): the
+    # serialized memory topology the plan was made for.  None on two-tier
+    # plans — the canonical fast/slow graph is already fully described by
+    # ``tiers``/``cost_model``, and dropping the key keeps every golden
+    # plan JSON byte-identical. ----
+    tier_graph: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------ queries --
     @property
@@ -210,6 +242,10 @@ class PlacementPlan:
             del d["objective"], d["cost_model"], d["predicted_step_times"]
         elif self.cost_model is not None:
             d["cost_model"] = self.cost_model.to_dict()   # inf -> None
+        if self.tier_graph is None:
+            # two-tier plans predate the graph; dropping the key keeps their
+            # golden JSON byte-identical
+            del d["tier_graph"]
         return d
 
     def to_json(self) -> str:
@@ -374,7 +410,7 @@ def enumerate_candidates(profile, hw: HWSpec, fast_bytes: float,
 def plan_training(workload, cost_model=None, fast_bytes: float = None, *,
                   policy: str = "sentinel_mi", max_mi: Optional[int] = None,
                   sim_all: bool = False, objective: str = "bytes",
-                  hw=None) -> PlacementPlan:
+                  tier_graph=None, hw=None) -> PlacementPlan:
     """Pick the optimal migration interval.
 
     Note on Eq. 2: the paper states T(MI) > (S - RS)/BW — the worst case of a
@@ -389,6 +425,7 @@ def plan_training(workload, cost_model=None, fast_bytes: float = None, *,
     """
     cm = _resolve_cost_model(cost_model, hw, "plan_training")
     _check_objective(objective, "plan_training")
+    sim_hw, fast_bytes = _graph_fold(cm, tier_graph, fast_bytes)
     wl = as_workload(workload)
     profile = getattr(wl, "profile", None)
     if profile is None:                      # protocol workloads / timelines
@@ -398,7 +435,7 @@ def plan_training(workload, cost_model=None, fast_bytes: float = None, *,
                         "sources a TraceProfile (candidate enumeration reads "
                         "the profiled objects)")
     pol = get_policy(policy)
-    cands = enumerate_candidates(profile, cm, fast_bytes, max_mi)
+    cands = enumerate_candidates(profile, sim_hw, fast_bytes, max_mi)
     survivors = [c for c in cands if c.space_ok and c.time_ok]
     if not survivors:                        # fall back: least-bad candidates
         survivors = [c for c in cands if c.space_ok] or cands
@@ -407,10 +444,10 @@ def plan_training(workload, cost_model=None, fast_bytes: float = None, *,
     best_pred: Optional[CostReport] = None
     pool = survivors if not sim_all else cands
     for c in pool:
-        c.sim = pol.simulate(wl, cm, fast_bytes, mi=c.mi)
+        c.sim = pol.simulate(wl, sim_hw, fast_bytes, mi=c.mi)
         steps_used += 1 + c.sim.detail.get("tt_steps_used", 0)
         if objective == "latency":
-            pred = cm.price_result(c.sim)
+            pred = cm.price_result(c.sim, tier_graph=tier_graph)
             if best is None or pred.time < best_pred.time:
                 best, best_pred = c, pred
         elif best is None or c.sim.time < best.sim.time:
@@ -419,11 +456,14 @@ def plan_training(workload, cost_model=None, fast_bytes: float = None, *,
     return PlacementPlan(
         kind="training", policy=policy, fast_bytes=fast_bytes,
         rs=best.sim.detail.get("rs", 0.0), mi=best.mi, stall_on_case3=stall,
-        steps_used=steps_used, tiers=tiers_from_hw(cm, fast_bytes),
+        steps_used=steps_used,
+        tiers=list(tier_graph.tiers) if tier_graph is not None
+        else tiers_from_hw(cm, fast_bytes),
         candidates=cands, sim=best.sim, objective=objective,
         cost_model=cm if objective == "latency" else None,
         predicted_step_times=list(best_pred.step_times)
-        if best_pred else None)
+        if best_pred else None,
+        tier_graph=_graph_dict(tier_graph, cm, fast_bytes))
 
 
 def mi_to_periods(profile, mi: int) -> int:
@@ -505,7 +545,8 @@ def _tenant_knobs(wl, policy: str) -> dict:
 def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
                  policy: Optional[str] = None,
                  lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
-                 objective: str = "bytes", hw=None) -> PlacementPlan:
+                 objective: str = "bytes", tier_graph=None,
+                 hw=None) -> PlacementPlan:
     """Pick the hot window and prefetch look-ahead for serving-time tiering.
 
     On a multi-tenant workload (one exposing ``tenants`` — see
@@ -523,6 +564,7 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
     ``sentinel_slo`` (the SLO guarantees outrank raw predicted time)."""
     cm = _resolve_cost_model(cost_model, hw, "plan_serving")
     _check_objective(objective, "plan_serving")
+    sim_hw, fast_bytes = _graph_fold(cm, tier_graph, fast_bytes)
     wl = as_workload(workload)
     trace = getattr(wl, "trace", None)
     if trace is None:                        # protocol workloads / timelines
@@ -543,7 +585,7 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
     # (it IS the reserve pool), so the hot window is never below one block
     hot_window = max(trace.block_tokens,
                      int(budget / (slots * kv_tok_all))) if kv_tok_all else 0
-    t_token, _ = serve_token_stats(trace, cm)
+    t_token, _ = serve_token_stats(trace, sim_hw)
     cold_bytes = max(0.0, trace.peak_kv_bytes() - budget)
     # Eq. 1 per-token: the hot windows plus the reserve pool must fit (the
     # floor above can violate this when fast memory is tiny)
@@ -557,7 +599,7 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
         prefetch = cold_bytes * min(1.0, la / max(1, trace.history_period))
         cands.append(ServeCandidate(la, hot_window, prefetch, t_token,
                                     space_ok=space_ok,
-                                    time_ok=t_token * la * cm.mig_bw
+                                    time_ok=t_token * la * sim_hw.mig_bw
                                     >= prefetch))
     # measure survivors on the simulator (fall back to everything when the
     # constraints kill all candidates, mirroring the training planner)
@@ -566,10 +608,10 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
     best_pred: Optional[CostReport] = None
     win_policy, win_sim = policy, None
     for c in pool:
-        c.sim = simulate(wl, cm, fast_bytes, policy, lookahead=c.lookahead,
-                         **knobs)
+        c.sim = simulate(wl, sim_hw, fast_bytes, policy,
+                         lookahead=c.lookahead, **knobs)
         if objective == "latency":
-            pred = cm.price_result(c.sim)
+            pred = cm.price_result(c.sim, tier_graph=tier_graph)
             if best is None or pred.time < best_pred.time:
                 best, best_pred, win_sim = c, pred, c.sim
         elif best is None or \
@@ -580,9 +622,9 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
         # the time-domain clock (it deliberately leaves cold-tail reads
         # slow), so the byte-domain sweep would never surface it
         for c in pool:
-            alt = simulate(wl, cm, fast_bytes, "alpha_migration",
+            alt = simulate(wl, sim_hw, fast_bytes, "alpha_migration",
                            lookahead=c.lookahead, **knobs)
-            pred = cm.price_result(alt)
+            pred = cm.price_result(alt, tier_graph=tier_graph)
             if pred.time < best_pred.time:
                 best, best_pred = c, pred
                 win_policy, win_sim = "alpha_migration", alt
@@ -622,11 +664,14 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
         if tenants else None,
         tenant_violations=dict(win_sim.tenant_violations)
         if tenants and win_sim.tenant_violations else None,
-        tiers=tiers_from_hw(cm, fast_bytes), candidates=cands, sim=win_sim,
+        tiers=list(tier_graph.tiers) if tier_graph is not None
+        else tiers_from_hw(cm, fast_bytes),
+        candidates=cands, sim=win_sim,
         objective=objective,
         cost_model=cm if objective == "latency" else None,
         predicted_step_times=list(best_pred.step_times)
-        if best_pred else None)
+        if best_pred else None,
+        tier_graph=_graph_dict(tier_graph, cm, fast_bytes))
 
 
 # ================================================================ entrypoint ==
@@ -635,7 +680,8 @@ def plan(workload, cost_model=None, fast_bytes: float = None, *,
          policy: Optional[str] = None, max_mi: Optional[int] = None,
          sim_all: bool = False,
          lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
-         objective: str = "bytes", hw=None) -> PlacementPlan:
+         objective: str = "bytes", tier_graph=None,
+         hw=None) -> PlacementPlan:
     """THE entry point: profile -> plan for any workload.
 
     ``workload`` is a training ``TraceProfile``, a serving ``ServeTrace``, a
@@ -647,6 +693,13 @@ def plan(workload, cost_model=None, fast_bytes: float = None, *,
     is ``"bytes"`` (legacy clock, default) or ``"latency"`` (select by
     CostModel-predicted time); the remaining knobs apply to the matching
     planner half only.
+
+    ``tier_graph`` plans against an arbitrary memory topology
+    (``runtime.TierGraph``): the policies simulate on the graph's two-tier
+    fold, pricing runs per edge, ``fast_bytes`` defaults to the compute
+    node's capacity, and the plan serializes the graph when it is anything
+    other than the canonical fast/slow pair (two-tier plans stay
+    byte-identical to their goldens).
     """
     cm = _resolve_cost_model(cost_model, hw, "plan")
     wl = as_workload(workload)
@@ -654,6 +707,7 @@ def plan(workload, cost_model=None, fast_bytes: float = None, *,
         return plan_training(wl, cm, fast_bytes,
                              policy=policy or "sentinel_mi",
                              max_mi=max_mi, sim_all=sim_all,
-                             objective=objective)
+                             objective=objective, tier_graph=tier_graph)
     return plan_serving(wl, cm, fast_bytes, policy=policy,
-                        lookaheads=lookaheads, objective=objective)
+                        lookaheads=lookaheads, objective=objective,
+                        tier_graph=tier_graph)

@@ -120,9 +120,19 @@ def list_policies() -> List[str]:
 
 
 def simulate(workload, hw: HWSpec, fast_bytes: float,
-             policy: str = "sentinel", **knobs) -> PlacementResult:
+             policy: str = "sentinel", *, tier_graph=None,
+             **knobs) -> PlacementResult:
     """Replay ``workload`` under a registered policy — the one simulation
-    entry point for training and serving alike."""
+    entry point for training and serving alike.
+
+    ``tier_graph`` runs the policy on an arbitrary memory topology
+    (``runtime.tiergraph.TierGraph``): the graph folds to the duck-typed
+    two-tier machine its compute node sees (``TierGraph.hw_view``), so
+    every registered policy runs unchanged — on the canonical two-tier
+    graph the fold reproduces ``hw`` exactly and the result is
+    bit-identical to the legacy path."""
+    if tier_graph is not None:
+        hw = tier_graph.hw_view(hw)
     tl = as_workload(workload).timeline()
     return get_policy(policy).simulate(tl, hw, fast_bytes, **knobs)
 

@@ -261,9 +261,43 @@ def synthetic_drift_flash_crowd(slots_per_tenant: int = 2,
         DriftSegment("calm_again", calm(8))))
 
 
+def synthetic_disagg_trace(num_slots: int = 4, num_layers: int = 8,
+                           kv_token_bytes: float = 4096,
+                           weight_bytes: float = 50e6,
+                           flops_per_token: float = 2e9):
+    """Prefill/decode phase drift: decode-steady traffic interrupted by a
+    prefill-heavy burst, then steady again.
+
+    The burst segment is the regime prefill/decode disaggregation exists
+    for (``serve/disagg.py``): long analytics prompts with short answers,
+    so admission compute (the per-step ``extra_*`` channels) dominates and
+    a colocated engine serializes a prompt's worth of prefill into every
+    decode step.  The steady segments are the opposite shape — short
+    conversational prompts, long decodes — where the planned hot windows
+    are all that matters.  Replayed by ``bench_runtime --drift`` and the
+    ``OnlineReplanner`` differential suite like any other drift workload:
+    the re-planner must catch the phase flip in both directions."""
+    from repro.core.hmsim import build_serve_trace
+    from repro.runtime.online import DriftSegment, DriftWorkload
+    geometry = dict(num_slots=num_slots, num_layers=num_layers,
+                    kv_token_bytes=kv_token_bytes, weight_bytes=weight_bytes,
+                    flops_per_token=flops_per_token)
+
+    def seg(prompt, decode, n):
+        reqs = [(prompt + (i * 7) % 13, decode + (i * 5) % 9)
+                for i in range(n)]
+        return build_serve_trace(reqs, **geometry)
+
+    return DriftWorkload("disagg_phases", (
+        DriftSegment("decode_steady", seg(48, 64, 2 * num_slots)),
+        DriftSegment("prefill_burst", seg(384, 12, 3 * num_slots)),
+        DriftSegment("decode_again", seg(48, 64, 2 * num_slots))))
+
+
 def drift_workloads() -> dict:
-    """The canonical piecewise-stationary trio the differential suite and
+    """The canonical piecewise-stationary set the differential suite and
     ``bench_runtime --drift`` replay."""
     return {w.name: w for w in (synthetic_drift_tenant_flip(),
                                 synthetic_drift_prompt_shift(),
-                                synthetic_drift_flash_crowd())}
+                                synthetic_drift_flash_crowd(),
+                                synthetic_disagg_trace())}

@@ -1,0 +1,158 @@
+"""Prefill/decode disaggregation over a device mesh.
+
+Prefill and decode contend for different resources: prefill is a
+compute-bound burst over the whole prompt, decode a bandwidth-bound
+steady-state loop.  Colocated on one device, every admission serializes a
+prompt's worth of compute into the decode stream (the cost model's
+``extra_*`` channels).  Disaggregated, prefill runs on its own device group
+and the finished KV pages stream over the device↔device edge into the
+decode pools — the admission cost becomes a *pipe* (the link), overlapped
+behind decode, instead of serialized compute.
+
+``DisaggregatedEngine`` subclasses ``ContinuousBatcher`` on the pools
+layout and changes exactly two things:
+
+  * ``_prefill`` runs on the prefill device group (``launch.mesh.
+    disagg_groups`` — the first import of the launch layer by the serving
+    stack) and ``jax.device_put``s the finished ``(last, fresh)`` KV to the
+    decode device.  The computation is the same jitted program, so logits
+    are bit-identical to the single-device engine.
+  * ``_alloc_admit_pages`` stages the admitted pages on the prefill
+    device's ``PageTable`` and moves them into the decode slot as a
+    ``MeshPageTable.migrate_slot`` tier transition, so every page crossing
+    the edge is a first-class, byte-conserving migration — the
+    ``("prefill", "decode")`` ledger entry matches
+    ``predict_pool_counters()["xdev_migration_bytes"]`` integer-exactly.
+
+Everything else (steady-state zero-re-pack decode, boundary demotions,
+prefix sharing, plan adoption) is inherited unchanged.
+
+``price_disagg`` is the planner-side model of the same trade: it prices a
+workload colocated (prefill serialized, all the HBM) against disaggregated
+(prefill stripped from the decode stream, KV streaming priced as a
+``TierGraph`` edge pipe, decode on its own half of the HBM) — the
+``bench_serve --disagg`` throughput gate.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Optional, Sequence
+
+import jax
+
+from repro.launch.mesh import disagg_groups
+from repro.models import kvcache
+from repro.runtime.policies import simulate
+from repro.runtime.tiergraph import TierGraph
+from repro.serve.engine import ContinuousBatcher
+
+
+class DisaggregatedEngine(ContinuousBatcher):
+    """A ``ContinuousBatcher`` whose prefill runs on a separate device group.
+
+    ``devices`` (or a ``jax.sharding.Mesh``) is split by
+    ``launch.mesh.disagg_groups``; with one device both groups alias it and
+    the engine degrades gracefully (same program, same logits, the mesh
+    page-table ledger still counts the logical edge traffic).  Requires the
+    persistent-pools layout (``cfg.use_paged_decode``), which is what makes
+    steady-state decode re-pack-free — the streamed pages land directly in
+    the decode pools.
+    """
+
+    def __init__(self, params, cfg, batch_slots: int, max_seq: int,
+                 scfg=None, plan=None, slot_tenants=None, devices=None):
+        if plan is None:
+            raise ValueError("DisaggregatedEngine requires a plan (the "
+                             "pools layout is planned)")
+        prefill_devs, decode_devs = disagg_groups(devices)
+        self.prefill_device = prefill_devs[0]
+        self.decode_device = decode_devs[0]
+        params = jax.device_put(params, self.decode_device)
+        super().__init__(params, cfg, batch_slots, max_seq, scfg=scfg,
+                         plan=plan, paged=True, slot_tenants=slot_tenants)
+        if self.pool is None:
+            raise ValueError(
+                "DisaggregatedEngine needs the persistent pools layout: "
+                "set cfg.use_paged_decode (and not cfg.prefix_lm)")
+        pg = self.page_tokens
+        # one staging slot on the prefill side: a request's pages are born
+        # there and migrate to their decode slot as one tier transition
+        self.mesh_table = kvcache.MeshPageTable(
+            [kvcache.PageTable(1, max_seq // pg, pg), self.ptable],
+            names=("prefill", "decode"),
+            page_bytes=pg * self._row_bytes)
+        self._stage = self.mesh_table.gslot(0, 0)
+        self.params_prefill = jax.device_put(params, self.prefill_device)
+        base_prefill = self._prefill           # the jitted model.prefill
+
+        def prefill_remote(p, batch):
+            del p                              # decode-side params unused
+            batch = jax.device_put(batch, self.prefill_device)
+            last, fresh = base_prefill(self.params_prefill, batch)
+            # stream the finished KV over the device<->device edge
+            return (jax.device_put(last, self.decode_device),
+                    jax.device_put(fresh, self.decode_device))
+
+        self._prefill = prefill_remote
+
+    # ------------------------------------------------------------- admits --
+    def _alloc_admit_pages(self, slot: int, n: int) -> None:
+        need = n - self.ptable.n_pages[slot]
+        if need <= 0:
+            return
+        stage_table = self.mesh_table.tables[0]
+        for _ in range(need):
+            stage_table.alloc(0, 0)            # prefill writes land here
+        self.mesh_table.migrate_slot(self._stage,
+                                     self.mesh_table.gslot(1, slot))
+
+    # ----------------------------------------------------------- counters --
+    @property
+    def xdev_migration_bytes(self) -> float:
+        """Bytes that crossed the prefill->decode edge (the MeshPageTable
+        ledger; matches predict_pool_counters integer-exactly when no
+        prefix pages are shared on the decode side)."""
+        return self.mesh_table.edge_bytes.get(("prefill", "decode"), 0.0)
+
+    def counters(self) -> dict:
+        out = super().counters()
+        out["xdev_migration_bytes"] = self.xdev_migration_bytes
+        return out
+
+
+def price_disagg(trace, cm, decode_fast_bytes: float, *,
+                 policy: str = "sentinel", graph: Optional[TierGraph] = None,
+                 **knobs) -> dict:
+    """Price a serving trace colocated vs disaggregated at equal total HBM.
+
+    Colocated: one device with ``2 * decode_fast_bytes`` of HBM runs both
+    phases; each admission's prefill serializes into the decode stream (the
+    ``extra_*`` channels of the recorded ``StepTraffic``).  Disaggregated:
+    decode keeps ``decode_fast_bytes`` (its half of the same total), the
+    ``extra_*`` channels move to the prefill group, and the finished KV
+    streams over the ``dev1 -> dev0`` edge of ``graph`` (default: the
+    2-device ``TierGraph.mesh``) priced per edge as a pipe — overlapped
+    behind decode instead of serialized.
+
+    Returns ``{"colocated": CostReport, "disagg": CostReport,
+    "edge_bytes": float, "graph": TierGraph}``.
+    """
+    graph = graph if graph is not None else \
+        TierGraph.mesh(2, cm, decode_fast_bytes)
+    res_c = simulate(trace, cm, 2.0 * decode_fast_bytes, policy, **knobs)
+    colocated = cm.price(res_c.step_traffic)
+    res_d = simulate(trace, cm, decode_fast_bytes, policy, **knobs)
+    kv_row = trace.num_layers * trace.kv_token_bytes
+    flops_tok = getattr(trace, "flops_per_token", 0.0)
+    stripped, edge_flows, edge_total = [], [], 0.0
+    for tr in res_d.step_traffic:
+        # prefill tokens admitted this step, recovered from the extra
+        # channel; their KV is what crosses the device<->device link
+        ptok = tr.extra_flops / flops_tok if flops_tok else 0.0
+        flow = ptok * kv_row
+        edge_total += flow
+        edge_flows.append({("dev1", "dev0"): flow} if flow else {})
+        stripped.append(replace(tr, extra_flops=0.0, extra_fast=0.0))
+    disagg = cm.price_on_graph(stripped, graph, edge_flows)
+    return {"colocated": colocated, "disagg": disagg,
+            "edge_bytes": edge_total, "graph": graph}

@@ -262,8 +262,7 @@ class ContinuousBatcher:
                     self.pool.share(slot, donor[0], shared_pages)
             self._prefix_donor[prefix_key] = (slot, tok_host)
         n = -(-S // pg)
-        for _ in range(self.ptable.n_pages[slot], n):
-            self.ptable.alloc(slot, 0)
+        self._alloc_admit_pages(slot, n)
         self.pool.admit_rows(fresh, slot, range(shared_pages, n))
         self.pool.splice_other(fresh, slot)
         # cold boundary: demote page by page toward the plan's target (shared
@@ -272,6 +271,15 @@ class ContinuousBatcher:
         while self.ptable.cold_tokens(slot) < target:
             if self.pool.demote_boundary(slot):
                 self.sim_migration_bytes += pg * self._row_bytes
+
+    def _alloc_admit_pages(self, slot: int, n: int) -> None:
+        """Grow ``slot`` to ``n`` hot pages for an admission.  The seam the
+        disaggregated engine overrides: there the pages are staged on the
+        prefill device's table and cross the device↔device edge as a
+        ``MeshPageTable.migrate_slot`` transition instead of being allocated
+        in place."""
+        for _ in range(self.ptable.n_pages[slot], n):
+            self.ptable.alloc(slot, 0)
 
     def _admit(self):
         for slot in range(self.B):
@@ -619,9 +627,14 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                 if budget[s] <= 0:
                     active[s] = False
         step_mig.append(mig - mig0)        # one engine decode step's delta
+    # xdev_migration_bytes: the planner's predicted device<->device edge
+    # traffic under prefill/decode disaggregation — every admitted page is
+    # prefilled on the prefill group and crosses the edge exactly once
+    # (serve/disagg.py's MeshPageTable ledger matches it integer-exactly)
     return {"migration_bytes": mig, "page_copies": copies,
             "admit_page_writes": admit_writes, "tenant_hot_peak": peaks,
-            "step_migration_bytes": step_mig}
+            "step_migration_bytes": step_mig,
+            "xdev_migration_bytes": admit_writes * pg * row_bytes}
 
 
 def serve_trace_for(cfg, requests: Sequence[tuple], *, slots: int,

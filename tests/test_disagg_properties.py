@@ -1,0 +1,100 @@
+"""Property-based suite (hypothesis) for ``MeshPageTable``.
+
+Random but always-legal op programs — alloc/share/CoW/demote/free plus
+cross-device ``migrate_slot`` — fuzz the three invariants the mesh page
+table exists for: (1) namespace uniqueness — every global slot names
+exactly one ``(device, local_slot)`` and round-trips; (2) per-device
+refcount/cold-prefix structure (each table's own ``check()``) after every
+op; (3) byte conservation — the mesh's edge ledgers always equal an
+independently-kept account of what the program itself moved, hot pages on
+the device↔device edge, cold pages inside host memory, never both.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dev dep: skip, don't error
+from hypothesis import given, settings, strategies as st
+
+from repro.models.kvcache import MeshPageTable, PageTable
+
+DEVS, SLOTS, NP, PG = 3, 2, 4, 8
+PAGE_BYTES = float(PG * 64)
+
+
+@st.composite
+def mesh_ops(draw, max_ops=40):
+    ops = []
+    for _ in range(draw(st.integers(1, max_ops))):
+        ops.append((draw(st.sampled_from(
+            ["refill", "share", "write", "demote", "free", "migrate"])),
+            draw(st.integers(0, DEVS * SLOTS - 1)),
+            draw(st.integers(0, DEVS * SLOTS - 1)),
+            draw(st.integers(0, NP - 1))))
+    return ops
+
+
+@given(mesh_ops())
+@settings(max_examples=40, deadline=None)
+def test_mesh_page_table_invariants(ops):
+    """Random alloc/share/CoW/demote/free/cross-device-migrate programs:
+    per-device structure and the mesh byte ledgers hold after every op, and
+    the ledgers equal an independent account of what the program moved."""
+    m = MeshPageTable([PageTable(SLOTS, NP, PG) for _ in range(DEVS)],
+                      page_bytes=PAGE_BYTES)
+    my_edges, my_host = {}, 0.0              # the test's own books
+
+    for op, a, b, i in ops:
+        if op == "refill":
+            m.free_slot(a)
+            for _ in range(i + 1):
+                t, _, _ = m._at(a)
+                if not t.hot_free:
+                    break
+                m.alloc(a, 0)
+        elif op == "share":
+            da, _ = m.owner(a)
+            db, _ = m.owner(b)
+            if da == db and a != b and m.n_pages(a) == 0 \
+                    and m.n_pages(b) > 0:
+                m.share(a, b, min(i + 1, m.n_pages(b)))
+        elif op == "write":
+            if i < m.n_pages(a):
+                m.cow(a, i)
+        elif op == "demote":
+            t, _, s = m._at(a)
+            bnd = t.cold_pages(s)
+            if bnd < t.n_pages[s] and t.cold_free:
+                t.demote(s, bnd)
+        elif op == "free":
+            m.free_slot(a)
+        elif op == "migrate":
+            da, _ = m.owner(a)
+            db, _ = m.owner(b)
+            n, n_cold = m.n_pages(a), m.cold_pages(a)
+            n_hot = n - n_cold
+            dt, _, ds = m._at(b)
+            fits = (da != db and n > 0
+                    and dt.n_pages[ds] + n <= dt.pages_per_slot
+                    and not (n_cold and dt.n_pages[ds] > dt.cold_pages(ds))
+                    and len(dt.hot_free) >= n_hot
+                    and len(dt.cold_free) >= n_cold)
+            if fits:
+                out = m.migrate_slot(a, b)
+                assert out["pages"] == n
+                if n_hot:                    # cold-only moves touch no edge
+                    key = (m.names[da], m.names[db])
+                    my_edges[key] = my_edges.get(key, 0.0) \
+                        + n_hot * PAGE_BYTES
+                my_host += n_cold * PAGE_BYTES
+                assert out["hot_bytes"] == n_hot * PAGE_BYTES
+                assert out["cold_bytes"] == n_cold * PAGE_BYTES
+                assert m.n_pages(a) == 0
+
+        m.check()                            # ledgers + per-table structure
+        assert m.edge_bytes == my_edges, "edge ledger drifted from the " \
+            "test's own account"
+        assert m.host_internal_bytes == my_host
+        for g in range(m.slots):             # namespace stays a bijection
+            d, s = m.owner(g)
+            assert m.gslot(d, s) == g
+        total = sum(t.pages_in_use() for t in m.tables)
+        assert total == m.pages_in_use()
