@@ -44,7 +44,12 @@ emit bit-identical tokens to the single-device pools engine with zero
 steady-state re-packs, its cross-device migration ledger must equal the
 planner's predicted edge traffic integer-exactly, and ``price_disagg``
 must show disaggregated tokens/sec at or above colocated at equal total
-HBM under a prefill-heavy mix.  ``--json`` publishes every row (and the
+HBM under a prefill-heavy mix.  ``--prefill`` runs the cache-aware prefill
+gates on the real pool engine: shared-prefix admits must *run* strictly
+fewer prefill tokens than the unshared stream (the donor pages' compute is
+skipped), and on a burst mix the chunked engine must keep the p95 priced
+decode-step gap strictly below one-shot admission at tokens/sec no worse —
+both bit-identical to the dense all-HBM reference.  ``--json`` publishes every row (and the
 gate verdicts) for trend tracking across PRs.
 """
 from __future__ import annotations
@@ -330,6 +335,155 @@ def run_paged_smoke(arch: str = ARCH):
     return rows, (match, max(bytes_p, bytes_k), bytes_c)
 
 
+def run_prefill(arch: str = ARCH):
+    """Cache-aware prefill gates on the real pool engine.
+
+    (a) Shared-prefix compute skip: admitting N requests off one system
+        prompt with ``prefix_key`` set must *run* strictly fewer prefill
+        tokens than the byte-identical unshared stream — the rows whose KV
+        maps onto the donor's pages are never recomputed
+        (``prefill_compute_tokens`` / ``prefill_skipped_tokens``) — with
+        tokens identical to the dense all-HBM reference.
+    (b) Chunked prefill: on a burst mix (one long-decode anchor slot plus a
+        crowd of long prompts) the chunked engine must emit the same token
+        set as one-shot admission while its p95 priced decode-step gap
+        drops and tokens/sec does not: each engine step is priced through
+        ``CostModel.step_time`` — ``chunked_prefill=True`` folds the step's
+        prefill tokens into the pipe maximum (chunks hide behind decode),
+        the one-shot run serializes them after the step.
+
+    Returns rows and the verdict tuple ``(match_skip, compute_shared,
+    compute_unshared, match_chunk, p95_chunk, p95_oneshot, tok_s_chunk,
+    tok_s_oneshot)``.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.hardware import default_cost_model
+    from repro.models import model
+    from repro.models.layers import split_params
+    from repro.runtime.costmodel import StepTraffic
+    from repro.serve import engine
+
+    cfg0 = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg0, use_paged_decode=True)
+    params, _ = split_params(model.init_params(jax.random.PRNGKey(0), cfg))
+    max_seq, slots = 32, 2
+    cm = default_cost_model()
+
+    def drive(c, p, reqs, paged, chunk=0, keys=None):
+        if p is not None:
+            p = dataclasses.replace(p, prefill_chunk_tokens=chunk)
+        b = engine.ContinuousBatcher(params, c, slots, max_seq, plan=p,
+                                     paged=paged)
+        for i, (t, d) in enumerate(reqs):
+            b.submit(t, d, prefix_key=keys[i] if keys else None)
+        results, deltas, prev = [], [], 0
+        while b.queue or b._jobs or any(b.active):
+            if not b.step():
+                break
+            for i in range(slots):
+                if not b.active[i] and b.outputs[i]:
+                    results.append(b.outputs[i])
+                    b.outputs[i] = []
+            cur = sum(len(r) for r in results) \
+                + sum(len(o) for o in b.outputs)
+            deltas.append(cur - prev)
+            prev = cur
+        return results, deltas, b.counters()
+
+    def canon(outs):
+        return sorted(tuple(o) for o in outs)
+
+    # --- (a) shared-prefix compute skip ------------------------------------
+    sys_p = jax.random.randint(jax.random.PRNGKey(7), (9,), 0,
+                               cfg.vocab_size).astype(jnp.int32)
+    sreqs = []
+    for i in range(4):
+        user = jax.random.randint(jax.random.PRNGKey(11 + i), (2 + i,), 0,
+                                  cfg.vocab_size).astype(jnp.int32)
+        sreqs.append((jnp.concatenate([sys_p, user]), 5 + i % 2))
+    strace = serve_trace_for(get_config(arch),
+                             [(int(t.shape[0]), d, 0) for t, d in sreqs],
+                             slots=slots, layer_group=8,
+                             shared_prefix_tokens=int(sys_p.shape[0]))
+    splan = runtime.plan(strace, TPU_V5E, 0.2 * strace.peak_kv_bytes())
+    splan = dataclasses.replace(splan, hot_window=max_seq // 2,
+                                slot_hot_windows=[4, 8], page_tokens=4)
+    base_s, _, _ = drive(cfg0, None, sreqs, False)
+    out_sh, _, cnt_sh = drive(cfg, splan, sreqs, True, keys=["sys"] * 4)
+    out_un, _, cnt_un = drive(cfg, splan, sreqs, True)
+    match_skip = canon(base_s) == canon(out_sh) == canon(out_un)
+    comp_sh = cnt_sh["prefill_compute_tokens"]
+    comp_un = cnt_un["prefill_compute_tokens"]
+
+    # --- (b) chunked prefill on a burst mix --------------------------------
+    lens = [(6, 18), (20, 5), (18, 5), (19, 4)]
+    key, breqs = jax.random.PRNGKey(5), []
+    for plen, d in lens:
+        key, sub = jax.random.split(key)
+        breqs.append((jax.random.randint(sub, (plen,), 0,
+                                         cfg.vocab_size).astype(jnp.int32),
+                      d))
+    btrace = serve_trace_for(get_config(arch), lens, slots=slots,
+                             layer_group=8)
+    bplan = runtime.plan(btrace, TPU_V5E, 0.2 * btrace.peak_kv_bytes())
+    bplan = dataclasses.replace(bplan, hot_window=max_seq // 2,
+                                slot_hot_windows=[4, 8], page_tokens=4)
+    base_b, _, _ = drive(cfg0, None, breqs, False)
+    out_1, d_1, c_1 = drive(cfg, bplan, breqs, True, chunk=0)
+    out_c, d_c, c_c = drive(cfg, bplan, breqs, True, chunk=8)
+    match_chunk = canon(base_b) == canon(out_1) == canon(out_c)
+
+    # per-step gap pricing: decode tokens (output-count delta) and prefill
+    # tokens drawn from the engines' own step series; weight/KV streaming is
+    # identical in both runs, so the gap is priced on what the chunker
+    # actually moves — the compute pipe and the per-token KV reads
+    ft = getattr(btrace, "flops_per_token", 0.0) or 1e9
+    rb = btrace.num_layers * btrace.kv_token_bytes
+
+    def gaps(deltas, prefill_tokens, chunked):
+        sp = list(prefill_tokens) + [0] * (len(deltas) - len(prefill_tokens))
+        out = []
+        for dtok, ptok in zip(deltas, sp):
+            tr = StepTraffic(flops=dtok * ft, fast_read=dtok * rb,
+                             tokens=dtok, prefill_flops=ptok * ft)
+            out.append(cm.step_time(tr, chunked_prefill=chunked))
+        return out
+
+    def p95(series):
+        s = sorted(series)
+        return s[int(round(0.95 * (len(s) - 1)))] if s else 0.0
+
+    g_1 = gaps(d_1, c_1["step_prefill_tokens"], chunked=False)
+    g_c = gaps(d_c, c_c["step_prefill_tokens"], chunked=True)
+    p95_1, p95_c = p95(g_1), p95(g_c)
+    tok_1 = sum(d_1) / max(sum(g_1), 1e-30)
+    tok_c = sum(d_c) / max(sum(g_c), 1e-30)
+
+    ft_s = getattr(strace, "flops_per_token", 0.0) or 1e9
+    rows = [("bench_serve_prefill", "metric", "value"),
+            ("bench_serve_prefill", "tokens_match_skip", match_skip),
+            ("bench_serve_prefill", "prefill_compute_tokens_shared", comp_sh),
+            ("bench_serve_prefill", "prefill_compute_tokens_unshared",
+             comp_un),
+            ("bench_serve_prefill", "prefill_skipped_tokens",
+             cnt_sh["prefill_skipped_tokens"]),
+            ("bench_serve_prefill", "prefill_gflops_saved",
+             round((comp_un - comp_sh) * ft_s / 1e9, 4)),
+            ("bench_serve_prefill", "tokens_match_chunk", match_chunk),
+            ("bench_serve_prefill", "p95_gap_oneshot_us",
+             round(p95_1 * 1e6, 4)),
+            ("bench_serve_prefill", "p95_gap_chunked_us",
+             round(p95_c * 1e6, 4)),
+            ("bench_serve_prefill", "tok_s_oneshot", round(tok_1, 1)),
+            ("bench_serve_prefill", "tok_s_chunked", round(tok_c, 1))]
+    return rows, (match_skip, comp_sh, comp_un, match_chunk,
+                  p95_c, p95_1, tok_c, tok_1)
+
+
 def run_disagg(arch: str = ARCH):
     """Prefill/decode disaggregation: the real engine pair plus the
     planner-side throughput model.
@@ -436,6 +590,13 @@ def main(argv=None):
                          "sentinel_slo at zero quota violations (where "
                          "tenant-blind sentinel violates) with migration "
                          "bytes within 1.2x, at 20%% fast memory")
+    ap.add_argument("--prefill", action="store_true",
+                    help="also run the cache-aware prefill gates: shared-"
+                         "prefix admits compute strictly fewer prefill "
+                         "tokens than unshared, chunked prefill keeps the "
+                         "p95 priced decode-step gap below one-shot at "
+                         "tokens/sec no worse, both bit-identical to the "
+                         "dense all-HBM reference")
     ap.add_argument("--disagg", action="store_true",
                     help="also run the prefill/decode disaggregation gates: "
                          "bit-identical tokens vs the single-device engine "
@@ -590,6 +751,32 @@ def main(argv=None):
                   f"mig={mig_slo / 1e6:.4f}/{mig_blind / 1e6:.4f}MB,"
                   f"{'OK' if t_ok else 'FAIL'}")
 
+    prefill_rows = []
+    if args.prefill:
+        prows, (m_skip, comp_sh, comp_un, m_chunk,
+                p95_c, p95_1, tok_c, tok_1) = run_prefill(args.arch)
+        prefill_rows += prows
+        for r in prows:
+            print(",".join(map(str, r)))
+        p_ok = m_skip and comp_sh < comp_un \
+            and m_chunk and p95_c < p95_1 and tok_c >= tok_1
+        ok &= p_ok
+        checks.append({"check": "prefill",
+                       "tokens_match_skip": m_skip,
+                       "prefill_compute_tokens_shared": comp_sh,
+                       "prefill_compute_tokens_unshared": comp_un,
+                       "tokens_match_chunk": m_chunk,
+                       "p95_gap_chunked_us": round(p95_c * 1e6, 4),
+                       "p95_gap_oneshot_us": round(p95_1 * 1e6, 4),
+                       "tok_s_chunked": round(tok_c, 1),
+                       "tok_s_oneshot": round(tok_1, 1),
+                       "status": "OK" if p_ok else "FAIL"})
+        print(f"check,prefill,match={m_skip and m_chunk},"
+              f"compute_tok={comp_sh}/{comp_un},"
+              f"p95_gap={p95_c * 1e6:.4f}/{p95_1 * 1e6:.4f}us,"
+              f"tok_s={tok_c:.1f}/{tok_1:.1f},"
+              f"{'OK' if p_ok else 'FAIL'}")
+
     disagg_rows = []
     if args.disagg:
         drows, (match, repacks, xdev, xdev_pred, tok_d, tok_c) = \
@@ -617,7 +804,8 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump({"rows": [list(r) for r in
                                 rows + latency_rows + paged_rows
-                                + shared_rows + tenant_rows + disagg_rows],
+                                + shared_rows + tenant_rows + prefill_rows
+                                + disagg_rows],
                        "checks": checks}, f, indent=2)
         print(f"wrote {args.json}")
 

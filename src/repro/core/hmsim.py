@@ -160,6 +160,11 @@ class ServeTrace:
     reads: Dict[int, List[KVObject]] = field(default_factory=dict)
     active: Dict[int, int] = field(default_factory=dict)
     prefill_tokens: Dict[int, int] = field(default_factory=dict)
+    # prompt tokens per admit step the cache-aware engine does NOT compute:
+    # full blocks of a shared prefix whose KV a donor already materialized
+    # (engine._start_job's compute skip — the suffix pass attends back into
+    # the shared pages instead of recomputing them)
+    prefill_skip_tokens: Dict[int, int] = field(default_factory=dict)
 
     def rs_bytes(self) -> float:
         """Serving reserve pool (paper §4.3 restated per-token): the open,
@@ -209,6 +214,7 @@ def build_serve_trace(requests: Sequence[tuple], num_slots: int,
                     history_period, float(kv_token_bytes), float(weight_bytes),
                     float(flops_per_token))
     slot_free = [0] * num_slots
+    seen_prefix: set = set()
     uid = 0
     for req, r in enumerate(requests):
         p, d = r[0], r[1]
@@ -218,6 +224,18 @@ def build_serve_trace(requests: Sequence[tuple], num_slots: int,
         end = a + d - 1                     # last decode step
         slot_free[slot] = a + d
         tr.prefill_tokens[a] = tr.prefill_tokens.get(a, 0) + p
+        if prefix_id is not None and shared_prefix_tokens > 0:
+            if prefix_id in seen_prefix:
+                # cache-aware prefill skips full shared blocks a donor
+                # already materialized; capped below the last prompt token
+                # (at least one suffix row is always computed), mirroring
+                # engine._start_job's shared-page cap
+                skip = (min(shared_prefix_tokens, p - 1)
+                        // block_tokens) * block_tokens
+                if skip > 0:
+                    tr.prefill_skip_tokens[a] = \
+                        tr.prefill_skip_tokens.get(a, 0) + skip
+            seen_prefix.add(prefix_id)
         for t in range(a, end + 1):
             tr.active[t] = tr.active.get(t, 0) + 1
 

@@ -105,10 +105,13 @@ def attention(params, cfg, x, positions, *, kind: str = ATTN,
 
     if cache is not None and "k_hot" in cache:
         # persistent page pools ARE the cache (kvcache.PagedKVPools): write
-        # the new token's KV straight into its physical hot page and read
-        # back through the page table — no dense buffer exists on this path
-        out, new_cache = _pool_decode_core(cfg, q, k, v, cache, cache_index,
-                                           paged_view, window)
+        # the new KV straight into its physical hot pages and read back
+        # through the page table — no dense buffer exists on this path
+        core = _pool_prefill_core if (
+            paged_view is not None and paged_view.get("prefill")) \
+            else _pool_decode_core
+        out, new_cache = core(cfg, q, k, v, cache, cache_index,
+                              paged_view, window, positions)
         out = out.reshape(B, Sq, H * hd)
         out = constrain(out, ("batch", "seq", "heads"))
         return out @ params["wo"], new_cache
@@ -191,7 +194,56 @@ def _paged_decode_core(cfg, q, k_all, v_all, cache_index, paged_view, window):
     return out
 
 
-def _pool_decode_core(cfg, q, k, v, cache, cache_index, paged_view, window):
+def _pool_prefill_core(cfg, q, k, v, cache, cache_index, paged_view, window,
+                       positions):
+    """Suffix/chunk prefill straight into the persistent page pools.
+
+    One admitted slot (B == 1), ``Sq`` prompt tokens starting at logical
+    position ``cache_index`` (a traced scalar).  ``paged_view`` carries the
+    slot's own page-table row ``page_table (1, max_pages)`` / ``page_tier``
+    plus ``{"prefill": True}`` — the python-bool dispatch flag ``attention``
+    reads (it never becomes a traced value).  The new rows are scattered
+    into the slot's physical hot pages, then attention gathers the FULL
+    table row back (Skv = max_pages * page_tokens = max_seq), reading each
+    page from the hot or cold pool by tier.  Gathering the full row keeps
+    every reduction shape identical to the dense prefill path, which is
+    what makes the computed rows bit-identical to a full-prompt prefill:
+    rows beyond the valid region are finite stale data masked to exactly
+    zero probability by ``attn_bias`` (exp(x + NEG_INF) == 0.0 in float32),
+    the same way the dense path masks its zero-filled tail.  Shared-prefix
+    pages below ``cache_index`` are read, never written — the engine caps
+    the start offset so the write region covers only private pages.
+    """
+    B, Sq, KV, G, hd = q.shape
+    assert B == 1, "pool prefill admits one slot at a time"
+    page = paged_view["page_tokens"]
+    table = paged_view["page_table"]           # (1, max_pages) this slot
+    tier = paged_view["page_tier"]
+    pos = jnp.asarray(cache_index, jnp.int32) \
+        + jnp.arange(Sq, dtype=jnp.int32)
+    phys = table[0, pos // page]               # physical hot page per token
+    off = pos % page
+    k_hot = cache["k_hot"].at[phys, off].set(k.reshape(Sq, KV * hd))
+    v_hot = cache["v_hot"].at[phys, off].set(v.reshape(Sq, KV * hd))
+    new_cache = {"k_hot": k_hot, "v_hot": v_hot,
+                 "k_cold": cache["k_cold"], "v_cold": cache["v_cold"]}
+    # full-row gather: (max_pages, page, KV*hd) -> (1, max_seq, KV, hd);
+    # out-of-pool indices clamp and are discarded by the tier select
+    sel = (tier[0] == 0)[:, None, None]
+    k_all = jnp.where(sel, k_hot[table[0]], cache["k_cold"][table[0]])
+    v_all = jnp.where(sel, v_hot[table[0]], cache["v_cold"][table[0]])
+    Skv = k_all.shape[0] * page
+    k_all = k_all.reshape(1, Skv, KV, hd)
+    v_all = v_all.reshape(1, Skv, KV, hd)
+    bias = attn_bias(positions, jnp.arange(Skv), window=window)
+    if bias.ndim == 2:
+        bias = bias[None]
+    out = _gqa_core(q, k_all, v_all, bias, cfg.attn_softcap)
+    return out, new_cache
+
+
+def _pool_decode_core(cfg, q, k, v, cache, cache_index, paged_view, window,
+                      positions=None):
     """Decode attention with the persistent page pools as the cache.
 
     ``cache`` holds one attention layer's pools ({"k_hot","v_hot","k_cold",

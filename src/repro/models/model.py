@@ -75,7 +75,9 @@ def forward(params, cfg, batch, *, caches=None, cache_index=None,
                 positions = (ci[:, None] if ci.ndim >= 1 else
                              jnp.broadcast_to(ci[None, None], (B, S)))
         else:
-            x, positions = _inputs_to_h(params, cfg, batch)
+            x, pos0 = _inputs_to_h(params, cfg, batch)
+            if positions is None:      # suffix prefill supplies its own
+                positions = pos0
 
     x, new_caches, aux = transformer.stack_forward(
         params["stack"], cfg, x, positions, caches=caches,
@@ -123,6 +125,36 @@ def prefill(params, cfg, batch, max_seq: Optional[int] = None):
     caches = kvcache.init_cache(cfg, B, max_seq or S, param_dtype(cfg))
     # prefill writes the first S positions; attention uses full-seq buffers
     logits, new_caches, _ = forward(params, cfg, batch, caches=caches)
+    return logits[:, -1], new_caches
+
+
+def prefill_suffix(params, cfg, batch, *, caches, start, paged_view=None):
+    """Run prefill over a prompt *suffix* against pre-existing KV state.
+
+    ``batch["tokens"]`` holds only ``tokens[start:]`` of the prompt; the KV
+    of the first ``start`` tokens is already materialized in ``caches`` (a
+    shared-prefix donor's physical pages on the pools layout, or a dense
+    cache a previous chunk wrote into).  Positions and the cache write
+    offset both begin at ``start``, and each new row attends back over the
+    whole valid prefix, so the computed rows are bit-identical to the same
+    rows of a full-prompt ``prefill`` — the shared-prefix compute skip and
+    chunked prefill both reduce to calling this per suffix/chunk.
+
+    On the pools layout ``paged_view`` carries the admitted slot's page-
+    table row (plus ``{"prefill": True}``) and ``caches`` is the live
+    ``PagedKVPools`` tree: attention writes the suffix KV straight into the
+    slot's physical hot pages and reads back through the table
+    (models/attention._pool_prefill_core).  Returns
+    ``(last_row_logits, new_caches)``.
+    """
+    tokens = batch["tokens"]
+    B, L = tokens.shape[0], tokens.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None],
+                                 (B, L)) + start
+    logits, new_caches, _ = forward(params, cfg, batch, caches=caches,
+                                    cache_index=start, positions=positions,
+                                    paged_view=paged_view)
     return logits[:, -1], new_caches
 
 

@@ -83,6 +83,18 @@ class StepTraffic:
     seconds already on the critical path (Case-3 / SLO repair copies).
     ``extra_flops``/``extra_fast`` carry the off-timeline add-on (slot-refill
     prefill), always fast-tier.
+
+    ``prefill_flops``/``prefill_read`` refine the prefill add-on for the
+    cache-aware engine: ``prefill_flops`` is the prompt compute actually
+    *run* (net of the shared-prefix compute skip — rows whose KV maps onto
+    a donor's pages are never recomputed) and ``prefill_read`` the shared
+    KV bytes those skipped rows' successors attend back into.  When
+    ``extra_flops`` is zero the prefill terms stand alone; series built by
+    the serving timeline set both, with ``extra_flops`` preferred so legacy
+    pricing is unchanged (``extra_flops == prefill_flops`` there).  With
+    ``chunked_prefill=True`` the pricing entry points fold the prefill term
+    into the step's pipe maximum (prefill chunks interleave with decode)
+    instead of serializing it after the step.
     """
     flops: float = 0.0
     fast_read: float = 0.0
@@ -95,6 +107,8 @@ class StepTraffic:
     extra_flops: float = 0.0
     extra_fast: float = 0.0
     stall: float = 0.0
+    prefill_flops: float = 0.0
+    prefill_read: float = 0.0
 
 
 @dataclass
@@ -183,11 +197,18 @@ class CostModel:
         — reads beyond that fraction buy no time, only migration traffic."""
         return self.fast_read_bw / (self.fast_read_bw + self.ext_read_bw())
 
-    def step_time(self, tr: StepTraffic) -> float:
+    def step_time(self, tr: StepTraffic, *,
+                  chunked_prefill: bool = False) -> float:
         """Price one step: max over the contended pipes (see module doc),
         plus the serialized demand misses — a reactive policy's slow reads
         are discovered at touch time and stall compute instead of streaming
-        behind it (the planned remainder overlaps inside ``T_ext``)."""
+        behind it (the planned remainder overlaps inside ``T_ext``).
+
+        ``chunked_prefill`` models the engine's interleaved prefill: the
+        prefill add-on becomes one more pipe under the step maximum (chunks
+        run between decode dispatches and hide behind the slower of the
+        two) instead of serializing after the step — the one-shot engine's
+        whole-batch stall."""
         vin = tr.mig_in * (1.0 - self.dma_overlap)
         vout = tr.mig_out * (1.0 - self.dma_overlap)
         planned_slow = max(0.0, tr.slow_read - tr.demand_read)
@@ -198,34 +219,48 @@ class CostModel:
         t_ext = max(planned_slow / self.ext_read_bw()
                     + max(vin / self.mig_read_bw, vout / self.mig_write_bw),
                     (tr.slow_read + vin + vout) / self.host_internal_bw)
+        extra = self._extra_time(tr)
         t = max(t_compute, t_roofline, t_hbm, t_ext)
+        if chunked_prefill:
+            t = max(t, extra)
+            extra = 0.0
         return t + min(tr.demand_read, tr.slow_read) / self.ext_read_bw() \
-            + self._extra_time(tr) + tr.stall \
+            + extra + tr.stall \
             + tr.migs * self.mig_overhead
 
-    def step_time_all_fast(self, tr: StepTraffic) -> float:
+    def step_time_all_fast(self, tr: StepTraffic, *,
+                           chunked_prefill: bool = False) -> float:
         """The same step with every demand byte in the fast tier and no
         migration: the roofline floor ``step_time`` can never beat."""
-        return max(tr.flops / self.peak_flops,
-                   (tr.fast_read + tr.slow_read) / self.fast_read_bw) \
-            + self._extra_time(tr)
+        t = max(tr.flops / self.peak_flops,
+                (tr.fast_read + tr.slow_read) / self.fast_read_bw)
+        extra = self._extra_time(tr)
+        return max(t, extra) if chunked_prefill else t + extra
 
     def _extra_time(self, tr: StepTraffic) -> float:
-        if not tr.extra_flops and not tr.extra_fast:
+        # extra_flops is preferred when both are set (the serving timeline
+        # mirrors it into prefill_flops); prefill_read rides the same fast
+        # pipe as the prefill's own KV traffic
+        eflops = tr.extra_flops or tr.prefill_flops
+        ebytes = tr.extra_fast + tr.prefill_read
+        if not eflops and not ebytes:
             return 0.0
-        return max(tr.extra_flops / self.peak_flops,
-                   tr.extra_fast / self.fast_read_bw)
+        return max(eflops / self.peak_flops,
+                   ebytes / self.fast_read_bw)
 
-    def price(self, traffic: Sequence[StepTraffic]) -> CostReport:
+    def price(self, traffic: Sequence[StepTraffic], *,
+              chunked_prefill: bool = False) -> CostReport:
         """Fold a traffic series to predicted seconds and tokens/sec."""
-        step_times = [self.step_time(tr) for tr in traffic]
+        step_times = [self.step_time(tr, chunked_prefill=chunked_prefill)
+                      for tr in traffic]
         return CostReport(time=sum(step_times),
                           compute_time=sum(self.step_time_all_fast(tr)
                                            for tr in traffic),
                           tokens=int(sum(tr.tokens for tr in traffic)),
                           step_times=step_times)
 
-    def price_result(self, result, tier_graph=None) -> CostReport:
+    def price_result(self, result, tier_graph=None, *,
+                     chunked_prefill: bool = False) -> CostReport:
         """Price a ``PlacementResult`` through its recorded traffic.
 
         With ``tier_graph`` the series is priced per *edge*: each step's
@@ -238,13 +273,15 @@ class CostModel:
                 f"result for policy {result.policy!r} carries no "
                 "step_traffic (was it built by runtime.simulate?)")
         if tier_graph is None:
-            return self.price(traffic)
+            return self.price(traffic, chunked_prefill=chunked_prefill)
         return self.price_on_graph(traffic, tier_graph,
-                                   getattr(result, "edge_traffic", None))
+                                   getattr(result, "edge_traffic", None),
+                                   chunked_prefill=chunked_prefill)
 
     def price_on_graph(self, traffic: Sequence[StepTraffic], tier_graph,
                        edge_traffic: Optional[Sequence[dict]] = None,
-                       compute: Optional[str] = None) -> CostReport:
+                       compute: Optional[str] = None, *,
+                       chunked_prefill: bool = False) -> CostReport:
         """Per-edge pricing: fold each step's channels onto graph edges and
         take the pipe maximum across them.
 
@@ -277,7 +314,7 @@ class CostModel:
 
         step_times = []
         for t, tr in enumerate(traffic):
-            pipes = [self.step_time(tr)]
+            pipes = [self.step_time(tr, chunked_prefill=chunked_prefill)]
             vin = tr.mig_in * (1.0 - self.dma_overlap)
             vout = tr.mig_out * (1.0 - self.dma_overlap)
             if vin:

@@ -165,6 +165,10 @@ class AccessTimeline:
     reads: Dict[int, List[Any]]
     reserved_bytes: float = 0.0
     source: Any = None              # the TraceProfile / ServeTrace adapted
+    # shared KV bytes the cache-aware prefill reads back instead of
+    # recomputing (serving only; None = no skip information in the source).
+    # extra_flops/extra_fast_bytes are then *net of the compute skip*.
+    prefill_read_bytes: Optional[List[float]] = None
 
     def timeline(self) -> "AccessTimeline":
         """A timeline is its own Workload (lets policies re-dispatch)."""
@@ -192,10 +196,12 @@ class AccessTimeline:
 
     def extra_time(self, s: int, hw: HWSpec) -> float:
         """Off-timeline add-on (prefill) at step s; always fast-tier."""
-        if not self.extra_flops[s] and not self.extra_fast_bytes[s]:
+        pread = self.prefill_read_bytes[s] if self.prefill_read_bytes else 0.0
+        if not self.extra_flops[s] and not self.extra_fast_bytes[s] \
+                and not pread:
             return 0.0
         return max(self.extra_flops[s] / hw.peak_flops,
-                   self.extra_fast_bytes[s] / hw.fast_bw)
+                   (self.extra_fast_bytes[s] + pread) / hw.fast_bw)
 
 
 @runtime_checkable
@@ -284,7 +290,8 @@ class ServingWorkload:
         tr = self.trace
         steps = tr.num_steps
         flops, fixed, total = [], [], []
-        tokens, eflops, ebytes = [], [], []
+        tokens, eflops, ebytes, pread = [], [], [], []
+        skip_tok = getattr(tr, "prefill_skip_tokens", None) or {}
         for t in range(steps):
             act = tr.active.get(t, 0)
             flops.append(act * tr.flops_per_token)
@@ -292,15 +299,21 @@ class ServingWorkload:
             fixed.append(fx)
             total.append(fx + sum(o.bytes for o in tr.reads.get(t, ())))
             tokens.append(act)
+            # cache-aware prefill: shared-prefix rows a donor already
+            # materialized are skipped (net flops/writes), their KV read
+            # back through the fast tier instead
             p_tok = tr.prefill_tokens.get(t, 0)
-            eflops.append(p_tok * tr.flops_per_token)
-            ebytes.append(p_tok * tr.num_layers * tr.kv_token_bytes)
+            skip = min(skip_tok.get(t, 0), p_tok)
+            eflops.append((p_tok - skip) * tr.flops_per_token)
+            ebytes.append((p_tok - skip) * tr.num_layers * tr.kv_token_bytes)
+            pread.append(skip * tr.num_layers * tr.kv_token_bytes)
         self._tl = AccessTimeline(
             kind=self.kind, num_steps=steps, objects=tr.objects, flops=flops,
             total_bytes=total, fixed_fast_bytes=fixed, tokens=tokens,
             extra_flops=eflops, extra_fast_bytes=ebytes, admits=tr.admits,
             births=tr.births, frees=tr.frees, reads=tr.reads,
-            reserved_bytes=0.0, source=tr)
+            reserved_bytes=0.0, source=tr,
+            prefill_read_bytes=pread if any(pread) else None)
         return self._tl
 
 
@@ -417,6 +430,9 @@ def merge_tenant_traces(tenants: Sequence[Tenant], traces: Sequence[Any],
         for t, n in tr.prefill_tokens.items():
             merged.prefill_tokens[t + dt] = \
                 merged.prefill_tokens.get(t + dt, 0) + n
+        for t, n in tr.prefill_skip_tokens.items():
+            merged.prefill_skip_tokens[t + dt] = \
+                merged.prefill_skip_tokens.get(t + dt, 0) + n
         merged.num_steps = max(merged.num_steps, tr.num_steps + dt)
         slot_off += tr.num_slots
     return merged, slot_tenants

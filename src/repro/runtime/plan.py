@@ -159,6 +159,11 @@ class PlacementPlan:
     lookahead: int = 0
     slot_hot_windows: Optional[List[int]] = None
     page_tokens: int = 0
+    # per-step prompt-token budget the engine's prefill scheduler drains
+    # before each decode dispatch (0 = one-shot prefill, the legacy
+    # behavior; the key is dropped from the JSON then, keeping every
+    # earlier golden plan byte-identical)
+    prefill_chunk_tokens: int = 0
     # ---- multi-tenant accounting (None on single-tenant plans) ----
     # slot_tenants[s] names the tenant owning batch slot s (the engine admits
     # a request only into its own tenant's slots); tenant_quotas are the
@@ -246,6 +251,10 @@ class PlacementPlan:
             # two-tier plans predate the graph; dropping the key keeps their
             # golden JSON byte-identical
             del d["tier_graph"]
+        if not self.prefill_chunk_tokens:
+            # one-shot prefill predates the chunk knob — same golden-JSON
+            # stability pattern as tier_graph
+            del d["prefill_chunk_tokens"]
         return d
 
     def to_json(self) -> str:
@@ -546,6 +555,7 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
                  policy: Optional[str] = None,
                  lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
                  objective: str = "bytes", tier_graph=None,
+                 prefill_chunk_tokens: int = 0,
                  hw=None) -> PlacementPlan:
     """Pick the hot window and prefetch look-ahead for serving-time tiering.
 
@@ -561,7 +571,12 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
     auditions ``alpha_migration`` against the default policy — every
     byte-objective candidate stays in the pool, so the latency winner is
     never priced slower than the bytes winner.  Tenanted workloads keep
-    ``sentinel_slo`` (the SLO guarantees outrank raw predicted time)."""
+    ``sentinel_slo`` (the SLO guarantees outrank raw predicted time).
+
+    ``prefill_chunk_tokens > 0`` plans for the engine's *chunked* prefill:
+    the prefill add-on is priced under the step's pipe maximum (chunks
+    interleave with decode) instead of serializing after it, and the knob
+    rides in the plan for ``ContinuousBatcher`` to adopt."""
     cm = _resolve_cost_model(cost_model, hw, "plan_serving")
     _check_objective(objective, "plan_serving")
     sim_hw, fast_bytes = _graph_fold(cm, tier_graph, fast_bytes)
@@ -611,7 +626,8 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
         c.sim = simulate(wl, sim_hw, fast_bytes, policy,
                          lookahead=c.lookahead, **knobs)
         if objective == "latency":
-            pred = cm.price_result(c.sim, tier_graph=tier_graph)
+            pred = cm.price_result(c.sim, tier_graph=tier_graph,
+                                   chunked_prefill=prefill_chunk_tokens > 0)
             if best is None or pred.time < best_pred.time:
                 best, best_pred, win_sim = c, pred, c.sim
         elif best is None or \
@@ -624,7 +640,8 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
         for c in pool:
             alt = simulate(wl, sim_hw, fast_bytes, "alpha_migration",
                            lookahead=c.lookahead, **knobs)
-            pred = cm.price_result(alt, tier_graph=tier_graph)
+            pred = cm.price_result(alt, tier_graph=tier_graph,
+                                   chunked_prefill=prefill_chunk_tokens > 0)
             if pred.time < best_pred.time:
                 best, best_pred = c, pred
                 win_policy, win_sim = "alpha_migration", alt
@@ -657,6 +674,7 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
         kind="serving", policy=win_policy, fast_bytes=fast_bytes, rs=rs,
         hot_window=best.hot_window, lookahead=best.lookahead,
         slot_hot_windows=slot_windows, page_tokens=blk,
+        prefill_chunk_tokens=int(prefill_chunk_tokens),
         slot_tenants=list(slot_tenants) if tenants and slot_tenants else None,
         tenant_quotas=dict(sorted(quotas.items()))
         if tenants and quotas else None,
@@ -681,6 +699,7 @@ def plan(workload, cost_model=None, fast_bytes: float = None, *,
          sim_all: bool = False,
          lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
          objective: str = "bytes", tier_graph=None,
+         prefill_chunk_tokens: int = 0,
          hw=None) -> PlacementPlan:
     """THE entry point: profile -> plan for any workload.
 
@@ -710,4 +729,5 @@ def plan(workload, cost_model=None, fast_bytes: float = None, *,
                              objective=objective, tier_graph=tier_graph)
     return plan_serving(wl, cm, fast_bytes, policy=policy,
                         lookaheads=lookaheads, objective=objective,
-                        tier_graph=tier_graph)
+                        tier_graph=tier_graph,
+                        prefill_chunk_tokens=prefill_chunk_tokens)

@@ -39,6 +39,12 @@ from repro.core.hardware import HWSpec
 from repro.runtime.costmodel import StepTraffic
 from repro.runtime.objects import AccessTimeline, as_workload
 
+
+def _pread(tl: AccessTimeline, s: int) -> float:
+    """Shared-KV read-back bytes of the cache-aware prefill at step ``s``
+    (StepTraffic.prefill_read); 0 for timelines without skip information."""
+    return tl.prefill_read_bytes[s] if tl.prefill_read_bytes else 0.0
+
 PAGE_BYTES = 2 << 20          # huge-page granularity for page-grain baselines
 
 
@@ -394,7 +400,9 @@ class PlacementPolicy:
                 tokens=tl.tokens[t], migs=migs,
                 extra_flops=tl.extra_flops[t],
                 extra_fast=tl.extra_fast_bytes[t],
-                stall=pol.stall_time - stall0))
+                stall=pol.stall_time - stall0,
+                prefill_flops=tl.extra_flops[t],
+                prefill_read=_pread(tl, t)))
         total += pol.stall_time          # SLO repairs stall the decode stream
         res = PlacementResult(
             policy=cls.name, time=total, compute_time=compute_lb,
@@ -1149,7 +1157,9 @@ class SentinelMI(PlacementPolicy):
                     flops=tl.flops[s], fast_read=t_fast,
                     slow_read=bytes_slow, tokens=tl.tokens[s],
                     extra_flops=tl.extra_flops[s],
-                    extra_fast=tl.extra_fast_bytes[s]))
+                    extra_fast=tl.extra_fast_bytes[s],
+                    prefill_flops=tl.extra_flops[s],
+                    prefill_read=_pread(tl, s)))
 
             # -- eviction channel accounting (fast->slow, full duplex) --
             evict_capacity = interval_compute * hw.mig_bw - forced_evict_bytes
@@ -1372,7 +1382,9 @@ class _CachingDaemon(PlacementPolicy):
                         tokens=tl.tokens[s],
                         migs=res.migrations - migs0,
                         extra_flops=tl.extra_flops[s],
-                        extra_fast=tl.extra_fast_bytes[s]))
+                        extra_fast=tl.extra_fast_bytes[s],
+                        prefill_flops=tl.extra_flops[s],
+                        prefill_read=_pread(tl, s)))
             last_rep_time = rep_time
         res.time = last_rep_time
         res.step_traffic = traffic
@@ -1413,7 +1425,8 @@ class _Static(PlacementPolicy):
             fast_read=tl.total_bytes[s] if fast else 0.0,
             slow_read=0.0 if fast else tl.total_bytes[s],
             tokens=tl.tokens[s], extra_flops=tl.extra_flops[s],
-            extra_fast=tl.extra_fast_bytes[s])
+            extra_fast=tl.extra_fast_bytes[s],
+            prefill_flops=tl.extra_flops[s], prefill_read=_pread(tl, s))
             for s in range(tl.num_steps)]
         return res
 

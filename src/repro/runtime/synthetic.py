@@ -294,10 +294,51 @@ def synthetic_disagg_trace(num_slots: int = 4, num_layers: int = 8,
         DriftSegment("decode_again", seg(48, 64, 2 * num_slots))))
 
 
+def synthetic_prefill_burst(num_slots: int = 4, num_layers: int = 8,
+                            kv_token_bytes: float = 4096,
+                            weight_bytes: float = 50e6,
+                            flops_per_token: float = 2e9):
+    """Chunked-prefill drift: decode-steady traffic hit by a flash crowd of
+    long *shared-prefix* prompts, then steady again.
+
+    The burst is the regime the cache-aware prefill scheduler exists for:
+    every crowd request carries the same prefix_id over a long common
+    prefix, so the engine skips the shared rows' compute (the trace's
+    ``prefill_skip_tokens`` / the timeline's net ``extra_flops`` +
+    ``prefill_read_bytes``) while the chunker keeps decode stepping through
+    the admissions.  Distinct from ``disagg_phases``: there the burst is
+    unshared and whole-prompt, here the re-planner must track a burst whose
+    *priced* prefill cost is far below its token count — mis-modeling the
+    skip shows up directly as clairvoyant regret in ``bench_runtime
+    --drift``."""
+    from repro.core.hmsim import build_serve_trace
+    from repro.runtime.online import DriftSegment, DriftWorkload
+    geometry = dict(num_slots=num_slots, num_layers=num_layers,
+                    kv_token_bytes=kv_token_bytes, weight_bytes=weight_bytes,
+                    flops_per_token=flops_per_token,
+                    shared_prefix_tokens=256)
+
+    def steady(n):
+        reqs = [(48 + (i * 7) % 13, 56 + (i * 5) % 9) for i in range(n)]
+        return build_serve_trace(reqs, **geometry)
+
+    def burst(n):
+        # one shared 256-token system prefix + a private tail per request
+        reqs = [(512 + (i * 11) % 23, 24 + (i * 3) % 7, 0)
+                for i in range(n)]
+        return build_serve_trace(reqs, **geometry)
+
+    return DriftWorkload("prefill_burst", (
+        DriftSegment("decode_steady", steady(2 * num_slots)),
+        DriftSegment("shared_burst", burst(4 * num_slots)),
+        DriftSegment("decode_again", steady(2 * num_slots))))
+
+
 def drift_workloads() -> dict:
     """The canonical piecewise-stationary set the differential suite and
     ``bench_runtime --drift`` replay."""
     return {w.name: w for w in (synthetic_drift_tenant_flip(),
                                 synthetic_drift_prompt_shift(),
                                 synthetic_drift_flash_crowd(),
-                                synthetic_disagg_trace())}
+                                synthetic_disagg_trace(),
+                                synthetic_prefill_burst())}

@@ -70,6 +70,15 @@ class DisaggregatedEngine(ContinuousBatcher):
         params = jax.device_put(params, self.decode_device)
         super().__init__(params, cfg, batch_slots, max_seq, scfg=scfg,
                          plan=plan, paged=True, slot_tenants=slot_tenants)
+        # prompts prefill whole on the prefill group and stream across the
+        # device edge — pool-direct suffix chunks would write the decode
+        # pools from the wrong device, so the legacy dense path stays on
+        self._pool_prefill_ok = False
+        if self.prefill_chunk_tokens:
+            raise ValueError(
+                "chunked prefill is colocated-engine only: the "
+                "DisaggregatedEngine prefills whole prompts on the prefill "
+                "group (set prefill_chunk_tokens=0)")
         if self.pool is None:
             raise ValueError(
                 "DisaggregatedEngine needs the persistent pools layout: "
@@ -152,7 +161,8 @@ def price_disagg(trace, cm, decode_fast_bytes: float, *,
         flow = ptok * kv_row
         edge_total += flow
         edge_flows.append({("dev1", "dev0"): flow} if flow else {})
-        stripped.append(replace(tr, extra_flops=0.0, extra_fast=0.0))
+        stripped.append(replace(tr, extra_flops=0.0, extra_fast=0.0,
+                                prefill_flops=0.0, prefill_read=0.0))
     disagg = cm.price_on_graph(stripped, graph, edge_flows)
     return {"colocated": colocated, "disagg": disagg,
             "edge_bytes": edge_total, "graph": graph}

@@ -41,8 +41,9 @@ gates shared < unshared).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional, Sequence
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +56,26 @@ class ServeConfig:
     max_seq: int = 2048
     temperature: float = 0.0     # 0 = greedy
     eos_id: int = -1             # -1: never stop early
+
+
+@dataclass
+class _PrefillJob:
+    """Per-slot admission state machine: ``queued -> prefilling(done_tokens)
+    -> active``.  A job binds one queued request to its batch slot; the
+    prefill scheduler (``_drain_prefill``) advances ``done`` chunk by chunk
+    — across decode steps when ``prefill_chunk_tokens`` bounds the per-step
+    budget, and across ``apply_plan`` re-plans (nothing in the job refers to
+    the plan; boundaries are applied at finalize)."""
+    tokens: Any                  # device prompt (S,)
+    tok_host: tuple              # host mirror, cached once at submit()
+    S: int                       # prompt length
+    budget: int                  # decode tokens requested
+    prefix_key: Any
+    tenant: Any
+    done: int = 0                # prompt tokens whose KV is materialized
+    shared_pages: int = 0        # full pages mapped onto the donor (skipped)
+    started: bool = False        # pages freed/shared, donor registered
+    last: Any = None             # last computed row's logits (1, vocab)
 
 
 def make_prefill(cfg):
@@ -88,13 +109,22 @@ class ContinuousBatcher:
 
     def __init__(self, params, cfg, batch_slots: int, max_seq: int,
                  scfg: Optional[ServeConfig] = None, plan=None,
-                 paged: bool = False, slot_tenants=None):
+                 paged: bool = False, slot_tenants=None,
+                 prefill_chunk_tokens: Optional[int] = None):
         if paged and plan is None:
             raise ValueError("paged=True requires a ServePlan (plan=...)")
         self.params, self.cfg = params, cfg
         self.B, self.max_seq = batch_slots, max_seq
         self.scfg = scfg or ServeConfig(max_seq=max_seq)
         self.plan = plan
+        # prefill scheduling: at most this many prompt tokens of pending
+        # prefill run per step() before the decode dispatch (0 = unlimited,
+        # i.e. every admit prefills in one shot like the legacy path).
+        # Defaults from the plan so `runtime.plan(...)` can carry the knob.
+        if prefill_chunk_tokens is None:
+            prefill_chunk_tokens = getattr(plan, "prefill_chunk_tokens", 0) \
+                if plan is not None else 0
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         # multi-tenant plans partition the batch slots: a request tagged with
         # a tenant is only admitted into that tenant's slots, so one bursty
         # tenant can never occupy the whole batch.  ``slot_tenants=`` lets an
@@ -155,7 +185,12 @@ class ContinuousBatcher:
         self.budget = [0] * batch_slots         # tokens left to generate
         self.last_tok = jnp.zeros((batch_slots,), jnp.int32)
         self.outputs = [[] for _ in range(batch_slots)]
-        self.queue: list = []
+        # per-tenant admission queues (None = untagged): _pop_for_slot walks
+        # only the queues a slot may draw from, instead of the old
+        # O(slots x queue) scan over one flat list.  ``_qseq`` stamps global
+        # FIFO order so cross-tenant arrival order is preserved exactly.
+        self._queues: dict = {}
+        self._qseq = 0
         # host-side mirrors: per-slot lengths and the active set, kept in
         # lockstep with the device arrays so per-step bookkeeping (page
         # targets, boundary advances) never reads a device array back
@@ -165,6 +200,27 @@ class ContinuousBatcher:
         self._prefix_donor: dict = {}          # prefix_key -> (slot, tokens)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, cfg, b, max_seq=max_seq))
+        # prefill scheduler state + counters
+        self._jobs: dict = {}                  # slot -> _PrefillJob
+        self._step_prefill = 0                 # prompt tokens run this step
+        self.step_prefill_tokens: list = []    # per-step series (counters())
+        self.prefill_compute_tokens = 0        # prompt rows actually run
+        self.prefill_skipped_tokens = 0        # rows skipped via shared pages
+        # pool-direct prefill (suffix compute straight into the physical
+        # pages) needs every layer's cache to be a pool entry: pure-attention
+        # stacks only, and not the disaggregated engine (which prefills on
+        # its own device group).  Everything else keeps the legacy dense
+        # one-shot prefill + admit_rows splice.
+        kinds = tuple(cfg.prologue) + tuple(cfg.period)
+        self._pool_prefill_ok = (
+            self.pool is not None
+            and all(k in kvcache.ATTN_KINDS for k in kinds)
+            and not cfg.prefix_lm and not cfg.num_prefix_tokens
+            and not cfg.num_codebooks)
+        if self.prefill_chunk_tokens and not self._pool_prefill_ok:
+            raise ValueError(
+                "prefill_chunk_tokens requires the persistent-pools layout "
+                "with a pure-attention stack (pool-direct prefill)")
 
     def submit(self, tokens, num_tokens: int, prefix_key=None, tenant=None):
         """Queue a request.  ``prefix_key`` (hashable) marks requests that
@@ -179,19 +235,39 @@ class ContinuousBatcher:
             # in the queue forever and run() would drop it silently
             raise ValueError(f"tenant {tenant!r} owns no batch slot "
                              f"(slot_tenants={self.slot_tenants})")
-        self.queue.append((tokens, num_tokens, prefix_key, tenant))
+        # host mirror cached once here: admissions (LCP against the donor)
+        # and the chunker never re-run jax.device_get on the prompt
+        tok_host = tuple(int(t) for t in jax.device_get(tokens))
+        self._queues.setdefault(tenant, deque()).append(
+            (self._qseq, tokens, tok_host, num_tokens, prefix_key, tenant))
+        self._qseq += 1
+
+    @property
+    def queue(self) -> list:
+        """Pending requests in global FIFO order, as ``(tokens, num_tokens,
+        prefix_key, tenant)`` — the legacy flat-queue view (tests drive
+        ``while b.queue or any(b.active)``); admission itself walks the
+        per-tenant deques directly."""
+        items = sorted((it for q in self._queues.values() for it in q),
+                       key=lambda it: it[0])
+        return [(t, n, pk, tn) for _, t, _, n, pk, tn in items]
 
     def _slot_tenant(self, slot: int):
         return self.slot_tenants[slot] if self.slot_tenants else None
 
-    def _next_for_slot(self, slot: int) -> Optional[int]:
-        """Queue index of the first request admissible to ``slot`` (FIFO
-        within each tenant; untagged requests match any slot)."""
+    def _pop_for_slot(self, slot: int):
+        """Pop the earliest-submitted request admissible to ``slot`` (FIFO
+        within each tenant; untagged requests match any slot).  Only the
+        slot's own tenant queue and the untagged queue are consulted — the
+        per-tenant split replaces the old O(slots x queue) flat scan while
+        preserving global FIFO order exactly."""
         tn = self._slot_tenant(slot)
-        for i, item in enumerate(self.queue):
-            if tn is None or item[3] is None or item[3] == tn:
-                return i
-        return None
+        best_q = None
+        for key in (self._queues.keys() if tn is None else (None, tn)):
+            q = self._queues.get(key)
+            if q and (best_q is None or q[0][0] < best_q[0][0]):
+                best_q = q
+        return best_q.popleft() if best_q else None
 
     def _note_tenant_pages(self):
         """Record each tenant's current hot-pool footprint (distinct
@@ -232,19 +308,20 @@ class ContinuousBatcher:
         (the plan's page_tokens may have been adjusted to divide max_seq)."""
         return self.plan.cold_len_slot(slot, seq_len, self.page_tokens)
 
-    def _admit_pool(self, slot: int, tokens, fresh, S: int, prefix_key):
+    def _admit_pool(self, slot: int, tok_host, fresh, S: int, prefix_key):
         """Admit into the persistent pools: free the slot's page refs, map
         shared-prefix full pages onto the donor's physical pages, allocate
         private pages for the rest, write the prefilled rows into them, and
         advance the cold boundary by per-page demotion.  Every operation is
-        an incremental delta on the slot's own pages."""
+        an incremental delta on the slot's own pages.  (Legacy dense-prefill
+        splice — the pool-direct scheduler writes through attention instead;
+        this path remains for the disaggregated engine and mixed stacks.)"""
         pg = self.page_tokens
         # stale donor registrations for this slot die with its pages
         for key in [k for k, (s, _) in self._prefix_donor.items()
                     if s == slot]:
             del self._prefix_donor[key]
         self.pool.free_slot(slot)
-        tok_host = tuple(int(t) for t in jax.device_get(tokens))
         shared_pages = 0
         if prefix_key is not None:
             donor = self._prefix_donor.get(prefix_key)
@@ -282,52 +359,174 @@ class ContinuousBatcher:
             self.ptable.alloc(slot, 0)
 
     def _admit(self):
+        """Bind queued requests to free slots and advance pending prefill.
+
+        Pool-direct stacks go through the admission state machine: binding
+        creates a ``_PrefillJob`` (``queued -> prefilling``) and
+        ``_drain_prefill`` runs page-aligned chunks up to the per-step
+        budget; a slot flips ``-> active`` only when its whole prompt's KV
+        is materialized.  Other layouts admit one-shot as before."""
         for slot in range(self.B):
-            if self.active[slot] or not self.queue:
+            if self.active[slot] or slot in self._jobs:
                 continue
-            qi = self._next_for_slot(slot)
-            if qi is None:
+            item = self._pop_for_slot(slot)
+            if item is None:
                 continue                   # no queued request for this tenant
-            tokens, budget, prefix_key, tenant = self.queue.pop(qi)
-            S = tokens.shape[-1]
-            last, fresh = self._prefill(self.params,
-                                        {"tokens": tokens[None]})
-            # splice this request's prefilled cache row into the batch cache
-            # (async dispatch: overlaps with in-flight decode work)
-            if self.pool is not None:
-                self._admit_pool(slot, tokens, fresh, S, prefix_key)
-            elif self.paged is not None:
-                # per-slot boundary: only THIS slot's cold pages are re-hosted
-                cold = self._slot_cold_target(slot, S)
-                self.ptable.splice_slot(slot, S, cold)
-                self.paged.hot = kvcache.splice_slot(self.paged.hot, fresh,
-                                                     slot, self.B)
-                self.paged.set_boundary(slot, 0)
-                if cold:
-                    self.paged.demote_rows(slot, cold)
-                self.sim_migration_bytes += cold * self._row_bytes
-            elif self.tiered is not None:
-                fc, fh = kvcache.split_seq_cache(fresh, self.max_seq,
-                                                 self.cold_len)
-                self.tiered.cold = kvcache.to_host(kvcache.splice_slot(
-                    self.tiered.cold, fc, slot, self.B))
-                self.tiered.hot = kvcache.splice_slot(
-                    self.tiered.hot, fh, slot, self.B)
-                # global boundary: the full cold prefix re-hosts on refill
-                self.sim_migration_bytes += self.cold_len * self._row_bytes
+            _, tokens, tok_host, budget, prefix_key, tenant = item
+            S = int(tokens.shape[-1])
+            if self._pool_prefill_ok:
+                self._jobs[slot] = _PrefillJob(tokens, tok_host, S, budget,
+                                               prefix_key, tenant)
             else:
-                self.caches = kvcache.splice_slot(self.caches, fresh, slot,
-                                                  self.B)
-            self.lengths = self.lengths.at[slot].set(S)
-            self._host_len[slot] = S
-            self.last_tok = self.last_tok.at[slot].set(
-                jnp.argmax(last[0, :self.cfg.vocab_size]).astype(jnp.int32))
-            self.active[slot] = True
-            self.budget[slot] = budget
-            self.outputs[slot] = [int(self.last_tok[slot])]
-            self.budget[slot] -= 1
-            self._refresh_active()
-            self._note_tenant_pages()
+                self._admit_dense(slot, tokens, tok_host, S, budget,
+                                  prefix_key)
+        if self._jobs:
+            self._drain_prefill()
+
+    def _admit_dense(self, slot: int, tokens, tok_host, S: int, budget: int,
+                     prefix_key):
+        """Legacy one-shot admission: dense full-prompt prefill, then a
+        layout-specific cache splice (async dispatch: overlaps with
+        in-flight decode work)."""
+        last, fresh = self._prefill(self.params,
+                                    {"tokens": tokens[None]})
+        if self.pool is not None:
+            self._admit_pool(slot, tok_host, fresh, S, prefix_key)
+        elif self.paged is not None:
+            # per-slot boundary: only THIS slot's cold pages are re-hosted
+            cold = self._slot_cold_target(slot, S)
+            self.ptable.splice_slot(slot, S, cold)
+            self.paged.hot = kvcache.splice_slot(self.paged.hot, fresh,
+                                                 slot, self.B)
+            self.paged.set_boundary(slot, 0)
+            if cold:
+                self.paged.demote_rows(slot, cold)
+            self.sim_migration_bytes += cold * self._row_bytes
+        elif self.tiered is not None:
+            fc, fh = kvcache.split_seq_cache(fresh, self.max_seq,
+                                             self.cold_len)
+            self.tiered.cold = kvcache.to_host(kvcache.splice_slot(
+                self.tiered.cold, fc, slot, self.B))
+            self.tiered.hot = kvcache.splice_slot(
+                self.tiered.hot, fh, slot, self.B)
+            # global boundary: the full cold prefix re-hosts on refill
+            self.sim_migration_bytes += self.cold_len * self._row_bytes
+        else:
+            self.caches = kvcache.splice_slot(self.caches, fresh, slot,
+                                              self.B)
+        self.prefill_compute_tokens += S
+        self._step_prefill += S
+        self._activate(slot, S, last, budget)
+
+    def _activate(self, slot: int, S: int, last, budget: int):
+        """Common tail of every admission: slot state flips to active with
+        the prompt's last-row logits decoding its first token."""
+        self.lengths = self.lengths.at[slot].set(S)
+        self._host_len[slot] = S
+        self.last_tok = self.last_tok.at[slot].set(
+            jnp.argmax(last[0, :self.cfg.vocab_size]).astype(jnp.int32))
+        self.active[slot] = True
+        self.budget[slot] = budget
+        self.outputs[slot] = [int(self.last_tok[slot])]
+        self.budget[slot] -= 1
+        self._refresh_active()
+        self._note_tenant_pages()
+
+    def _drain_prefill(self):
+        """Run pending prefill jobs, at most ``prefill_chunk_tokens`` prompt
+        tokens this step (0 = no budget: each job completes in one shot).
+        Jobs drain in slot order; chunk ends are page-aligned except a final
+        partial page, and the budget may overdraw by less than one page so a
+        tiny budget still guarantees progress."""
+        pg = self.page_tokens
+        budget = self.prefill_chunk_tokens
+        spent = 0
+        for slot in sorted(self._jobs):
+            job = self._jobs[slot]
+            while slot in self._jobs:
+                if budget and spent >= budget:
+                    return                 # budget exhausted: resume next step
+                if not job.started:
+                    self._start_job(slot, job)
+                pages_left = -(-(job.S - job.done) // pg)
+                take = pages_left if not budget else \
+                    min(pages_left, max(1, (budget - spent) // pg))
+                end = min(job.S, job.done + take * pg)
+                spent += end - job.done
+                self._run_chunk(slot, job, end)
+                if job.done >= job.S:
+                    self._finish_job(slot, job)
+
+    def _start_job(self, slot: int, job: _PrefillJob):
+        """First touch of a job: free the slot's old pages, map shared-
+        prefix full pages onto the donor's physical pages (the *compute
+        skip*: those rows' KV is already materialized, so prefill starts at
+        ``done = shared_pages * page_tokens``), and register this prompt as
+        the new donor."""
+        pg = self.page_tokens
+        for key in [k for k, (s, _) in self._prefix_donor.items()
+                    if s == slot]:
+            del self._prefix_donor[key]
+        self.pool.free_slot(slot)
+        shared = 0
+        if job.prefix_key is not None:
+            donor = self._prefix_donor.get(job.prefix_key)
+            if donor is not None and donor[0] != slot and \
+                    self.ptable.n_pages[donor[0]] > 0:
+                lcp = 0
+                for a, b in zip(job.tok_host, donor[1]):
+                    if a != b:
+                        break
+                    lcp += 1
+                # capped three ways: full pages of common prefix, pages the
+                # donor actually holds (a mid-prefill donor's pages are valid
+                # only up to its own ``done``), and strictly below the
+                # prompt's last token — the suffix pass must compute at least
+                # one row (the next-token logits), and a shared page is
+                # never written
+                shared = min(lcp // pg, self.ptable.n_pages[donor[0]],
+                             (job.S - 1) // pg)
+                if shared:
+                    self.pool.share(slot, donor[0], shared)
+            self._prefix_donor[job.prefix_key] = (slot, job.tok_host)
+        job.shared_pages = shared
+        job.done = shared * pg
+        job.started = True
+        self.prefill_skipped_tokens += job.done
+
+    def _run_chunk(self, slot: int, job: _PrefillJob, end: int):
+        """One page-aligned prefill chunk ``tokens[done:end]`` straight into
+        the slot's physical pages (model.prefill_suffix with this slot's
+        page-table row): attention writes the chunk's KV through the table
+        and each row attends back over the donor pages + earlier chunks, so
+        the rows are bit-identical to the same rows of a one-shot dense
+        prefill."""
+        pg = self.page_tokens
+        first = self.ptable.n_pages[slot]
+        n = -(-end // pg)
+        self._alloc_admit_pages(slot, n)
+        self.pool.stats["admit_page_writes"] += n - first
+        table, tier = self.pool.arrays()
+        view = {"page_table": table[slot][None], "page_tier": tier[slot][None],
+                "page_tokens": pg, "active": None, "prefill": True}
+        job.last, self.pool.tree = model.prefill_suffix(
+            self.params, self.cfg,
+            {"tokens": job.tokens[job.done:end][None]},
+            caches=self.pool.tree, start=job.done, paged_view=view)
+        self.prefill_compute_tokens += end - job.done
+        self._step_prefill += end - job.done
+        job.done = end
+
+    def _finish_job(self, slot: int, job: _PrefillJob):
+        """Prompt fully materialized: advance the cold boundary to the
+        *current* plan's target (re-plans adopted mid-prefill land here) and
+        flip the slot active."""
+        del self._jobs[slot]
+        target = self._slot_cold_target(slot, job.S)
+        while self.ptable.cold_tokens(slot) < target:
+            if self.pool.demote_boundary(slot):
+                self.sim_migration_bytes += self.page_tokens * self._row_bytes
+        self._activate(slot, job.S, job.last, job.budget)
 
     def step(self):
         """One lockstep decode step across all active slots — each slot writes
@@ -339,8 +538,18 @@ class ContinuousBatcher:
         all boundary/length bookkeeping runs on host-side mirrors.  Layout
         work happens only at events (admit, a slot growing into a new page,
         a boundary advance)."""
+        self._step_prefill = 0
         self._admit()
         if not any(self.active):
+            if self._jobs:
+                # prefill-only step: the chunk budget ran but no slot is
+                # ready to decode yet — still a step for accounting (the
+                # migration/prefill series stay aligned with real steps)
+                self.step_prefill_tokens.append(self._step_prefill)
+                self.step_migration_bytes.append(
+                    self.sim_migration_bytes - self._mig_accounted)
+                self._mig_accounted = self.sim_migration_bytes
+                return True
             return False
         paged_view = None
         if self.pool is not None:
@@ -425,6 +634,7 @@ class ContinuousBatcher:
                 self.active[slot] = False
         if self.active != was_active:
             self._refresh_active()
+        self.step_prefill_tokens.append(self._step_prefill)
         self.step_migration_bytes.append(
             self.sim_migration_bytes - self._mig_accounted)
         self._mig_accounted = self.sim_migration_bytes
@@ -440,7 +650,10 @@ class ContinuousBatcher:
         grain demotions, refcount-aware, zero copies for twin-deduped shared
         pages — and re-partitions slot tenancy for subsequent admissions.
         Grown windows cost nothing (cold pages are never promoted back).
-        Returns the migration bytes moved; they are attributed to the *next*
+        In-flight prefill jobs are unaffected and resume under the new plan
+        (their cold boundary is applied at finalize, from the plan current
+        *then*).  Returns the migration bytes moved; they are attributed to
+        the *next*
         decode step's ``step_migration_bytes`` entry, exactly as
         ``predict_pool_counters(..., plan_schedule=...)`` replays it."""
         if self.pool is None:
@@ -487,14 +700,21 @@ class ContinuousBatcher:
         out = {"sim_migration_bytes": self.sim_migration_bytes,
                "step_migration_bytes": list(self.step_migration_bytes),
                "tenant_hot_peak": dict(self.tenant_hot_peak),
-               "table_version": self.ptable.version if self.ptable else 0}
+               "table_version": self.ptable.version if self.ptable else 0,
+               "prefill_compute_tokens": self.prefill_compute_tokens,
+               "prefill_skipped_tokens": self.prefill_skipped_tokens,
+               # bytes of shared KV the skipped rows attend back into —
+               # the StepTraffic.prefill_read term the cost model prices
+               "prefill_read_bytes":
+                   self.prefill_skipped_tokens * self._row_bytes,
+               "step_prefill_tokens": list(self.step_prefill_tokens)}
         if self.pool is not None:
             out.update(self.pool.stats)
         return out
 
     def run(self):
         results = []
-        while self.queue or any(self.active):
+        while self.queue or self._jobs or any(self.active):
             if not self.step():
                 break
             for i in range(self.B):
@@ -507,7 +727,8 @@ class ContinuousBatcher:
 def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                           max_seq: int, page_tokens: int, row_bytes: float,
                           slot_tenants=None,
-                          plan_schedule: Sequence[tuple] = ()) -> dict:
+                          plan_schedule: Sequence[tuple] = (),
+                          prefill_chunk_tokens: int = 0) -> dict:
     """Pure-Python replay of the pools-layout batcher's bookkeeping: given
     the request stream ``[(prompt_tokens, decode_tokens[, tenant]), ...]``
     and a plan, predict ``sim_migration_bytes`` (total and the per-decode-
@@ -520,11 +741,16 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
     agreement contract: the simulator predicts, the engine counts, the two
     never drift (``tests/test_multi_tenant.py`` pins it).
 
-    The replay mirrors the engine's event order: per step, admission into
-    free slots (FIFO within each tenant), write-page growth for every active
-    slot, then per-slot cold-boundary demotions toward the plan's target;
-    peaks are sampled after each admission and after each step's demotions,
-    the same points the engine samples.
+    The replay mirrors the engine's event order: per step, binding of queued
+    requests to free slots (FIFO within each tenant), the prefill drain
+    (page-aligned chunks in slot order, at most ``prefill_chunk_tokens``
+    prompt tokens per step — 0 replays the legacy one-shot admission),
+    write-page growth for every active slot, then per-slot cold-boundary
+    demotions toward the plan's target; peaks are sampled after each
+    admission finalize and after each step's demotions, the same points the
+    engine samples.  Steps in which only prefill ran (budget exhausted
+    before any slot went active) still append a ``step_migration_bytes``
+    entry, exactly as ``ContinuousBatcher.step()`` does.
 
     ``plan_schedule`` makes the replay *segment-aware* for online
     re-planning: ``[(step, new_plan_or_delta), ...]`` means "the engine
@@ -578,7 +804,8 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
 
     schedule = sorted(((int(t), p) for t, p in plan_schedule),
                       key=lambda e: e[0])
-    while queue or any(active):
+    jobs: dict = {}                        # slot -> [done, prompt, decode, started]
+    while queue or jobs or any(active):
         mig0 = mig
         while schedule and schedule[0][0] <= len(step_mig):
             _, nxt = schedule.pop(0)       # ContinuousBatcher.apply_plan
@@ -596,8 +823,8 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                 if active[s]:
                     demote_to(s, plan.cold_len_slot(s, host_len[s], pg))
             note()
-        for s in range(slots):             # ContinuousBatcher._admit
-            if active[s] or not queue:
+        for s in range(slots):             # ContinuousBatcher._admit: bind
+            if active[s] or s in jobs or not queue:
                 continue
             tn_s = slot_tn(s)
             qi = next((i for i, (_, _, tn) in enumerate(queue)
@@ -605,13 +832,39 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
             if qi is None:
                 continue
             p, d, _ = queue.pop(qi)
-            n_pages[s] = -(-p // pg)
-            cold[s] = 0
-            admit_writes += n_pages[s]
-            demote_to(s, plan.cold_len_slot(s, p, pg))
-            host_len[s], active[s], budget[s] = p, True, d - 1
-            note()
+            jobs[s] = [0, p, d, False]     # queued -> prefilling(0)
+        spent = 0                          # _drain_prefill: slot order,
+        stop = False                       # page-aligned chunks, one budget
+        for s in sorted(jobs):
+            if stop:
+                break
+            job = jobs[s]
+            while s in jobs:
+                if prefill_chunk_tokens and spent >= prefill_chunk_tokens:
+                    stop = True            # resume next step, all slots
+                    break
+                if not job[3]:             # _start_job: free_slot
+                    n_pages[s] = cold[s] = 0
+                    job[3] = True
+                done, p = job[0], job[1]
+                pages_left = -(-(p - done) // pg)
+                take = pages_left if not prefill_chunk_tokens else \
+                    min(pages_left,
+                        max(1, (prefill_chunk_tokens - spent) // pg))
+                end = min(p, done + take * pg)
+                spent += end - done
+                admit_writes += -(-end // pg) - n_pages[s]
+                n_pages[s] = -(-end // pg)
+                job[0] = end
+                if end >= p:               # _finish_job -> active
+                    del jobs[s]
+                    demote_to(s, plan.cold_len_slot(s, p, pg))
+                    host_len[s], active[s], budget[s] = p, True, job[2] - 1
+                    note()
         if not any(active):
+            if jobs:
+                step_mig.append(mig - mig0)  # prefill-only step
+                continue
             break
         for s in range(slots):             # pool.ensure_write_page
             if active[s] and n_pages[s] * pg < host_len[s] + 1:
