@@ -80,14 +80,17 @@ def host_memory_kind() -> Optional[str]:
     return None
 
 
-def to_host(tree):
+def to_host(tree, device=None):
     """Place every array leaf in host memory (async copy; XLA overlaps it with
     whatever is executing — the migration channel).  Identity when the backend
-    exposes no host memory kind."""
+    exposes no host memory kind.  ``device`` selects whose host path the copy
+    rides (and on CPU-style backends, which device the array commits to) —
+    a sharded engine pins each shard's cold pool to that shard's device so
+    hot<->cold scatters never mix committed devices; default: device 0."""
     kind = host_memory_kind()
     if kind is None:
         return tree
-    dev = jax.devices()[0]
+    dev = device if device is not None else jax.devices()[0]
     sh = jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
     return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
 
@@ -809,8 +812,12 @@ class PagedKVPools:
 
     def __init__(self, cfg, slots: int, max_seq: int, page_tokens: int,
                  dtype=jnp.bfloat16, hot_pages: Optional[int] = None,
-                 cold_pages: Optional[int] = None):
+                 cold_pages: Optional[int] = None, device=None):
         assert max_seq % page_tokens == 0, (max_seq, page_tokens)
+        # the device whose host path cold pages ride (None = device 0): a
+        # sharded engine gives each shard's pool its own device so demotes
+        # never scatter across committed devices
+        self.device = device
         self.cfg, self.num_slots = cfg, slots
         self.max_seq, self.page_tokens = max_seq, page_tokens
         self.num_pages = max_seq // page_tokens
@@ -840,8 +847,8 @@ class PagedKVPools:
 
         def host_cold(entry, kind):
             if kind in ATTN_KINDS:
-                entry["k_cold"] = to_host(entry["k_cold"])
-                entry["v_cold"] = to_host(entry["v_cold"])
+                entry["k_cold"] = to_host(entry["k_cold"], self.device)
+                entry["v_cold"] = to_host(entry["v_cold"], self.device)
             return entry
 
         pro = [host_cold(self._pool_layer(k, dtype), k) for k in cfg.prologue]
@@ -930,7 +937,7 @@ class PagedKVPools:
                 k2 = pool[kk].at[new].set(pool[kk][src])
                 v2 = pool[vv].at[new].set(pool[vv][src])
             if tier == 1:
-                k2, v2 = to_host(k2), to_host(v2)
+                k2, v2 = to_host(k2, self.device), to_host(v2, self.device)
             pool[kk], pool[vv] = k2, v2
         self.stats["page_copies"] += 1
         return True
@@ -1003,7 +1010,8 @@ class PagedKVPools:
                 else:
                     kc = pool["k_cold"].at[cold_phys].set(pool["k_hot"][src])
                     vc = pool["v_cold"].at[cold_phys].set(pool["v_hot"][src])
-                pool["k_cold"], pool["v_cold"] = to_host(kc), to_host(vc)
+                pool["k_cold"], pool["v_cold"] = \
+                    to_host(kc, self.device), to_host(vc, self.device)
             self.stats["page_copies"] += 1
         return copied
 

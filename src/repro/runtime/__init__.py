@@ -55,9 +55,10 @@ from repro.runtime.costmodel import (TPU_V5E_COST, CostModel, CostReport,
 from repro.runtime.tiergraph import GraphHW, TierEdge, TierGraph
 from repro.runtime.plan import (Candidate, PlacementPlan, PlanDelta,
                                 ServeCandidate, enumerate_candidates,
-                                interval_stats, mi_to_periods, plan,
-                                plan_delta, plan_serving, plan_training,
-                                serve_token_stats, slot_kv_weights)
+                                interval_stats, mi_to_periods, pack_slots,
+                                plan, plan_delta, plan_serving,
+                                plan_training, serve_token_stats,
+                                slot_kv_weights, validate_slot_devices)
 from repro.runtime.policies import (PAGE_BYTES, POLICIES, PlacementPolicy,
                                     PlacementResult, Unit, build_units,
                                     get_policy, list_policies,
@@ -78,8 +79,8 @@ __all__ = [
     "Unit", "WindowStats", "Workload", "as_cost_model", "as_workload",
     "build_units", "drift_score", "enumerate_candidates", "get_policy",
     "interval_stats", "list_policies", "merge_tenant_traces", "mi_to_periods",
-    "normalized_quotas", "peak_object_bytes", "plan", "plan_churn_bytes",
-    "plan_delta", "plan_serving", "plan_training", "register_policy",
-    "replay_drift", "serve_token_stats", "simulate", "slot_kv_weights",
-    "tiers_from_hw",
+    "normalized_quotas", "pack_slots", "peak_object_bytes", "plan",
+    "plan_churn_bytes", "plan_delta", "plan_serving", "plan_training",
+    "register_policy", "replay_drift", "serve_token_stats", "simulate",
+    "slot_kv_weights", "tiers_from_hw", "validate_slot_devices",
 ]

@@ -281,7 +281,9 @@ class CostModel:
     def price_on_graph(self, traffic: Sequence[StepTraffic], tier_graph,
                        edge_traffic: Optional[Sequence[dict]] = None,
                        compute: Optional[str] = None, *,
-                       chunked_prefill: bool = False) -> CostReport:
+                       chunked_prefill: bool = False,
+                       device_traffic: Optional[Sequence[dict]] = None
+                       ) -> CostReport:
         """Per-edge pricing: fold each step's channels onto graph edges and
         take the pipe maximum across them.
 
@@ -293,7 +295,16 @@ class CostModel:
         per-step ``{(src, dst): bytes}`` flows the two-tier fold cannot
         see — cross-device KV streaming on the dev<->dev link — each priced
         at ``path_bw(src, dst)`` as its own pipe (a transfer engine running
-        behind compute, surfacing only when it is the bottleneck)."""
+        behind compute, surfacing only when it is the bottleneck).
+
+        ``device_traffic`` splits a step across compute nodes: per step a
+        ``{node_name: StepTraffic}`` map of each device's *own* share of the
+        reads/compute.  When present for a step, the scalar pipe is the max
+        over the devices' ``step_time`` values — devices run concurrently,
+        so the step lasts as long as its slowest shard — instead of the
+        global series' single-machine time (which would price the summed
+        reads through one HBM pipe and hide any skew).  The global series
+        still supplies tokens and the all-fast floor."""
         # attribute the mig channels to the unbounded (host-like) tier when
         # the graph has one — demotion targets capacity-free memory — and
         # fall back to the view's widest-path spill otherwise.  On the
@@ -314,7 +325,15 @@ class CostModel:
 
         step_times = []
         for t, tr in enumerate(traffic):
-            pipes = [self.step_time(tr, chunked_prefill=chunked_prefill)]
+            per_dev = (device_traffic[t] if device_traffic is not None
+                       and t < len(device_traffic) else None)
+            if per_dev:
+                pipes = [self.step_time(dtr,
+                                        chunked_prefill=chunked_prefill)
+                         for dtr in per_dev.values()]
+            else:
+                pipes = [self.step_time(tr,
+                                        chunked_prefill=chunked_prefill)]
             vin = tr.mig_in * (1.0 - self.dma_overlap)
             vout = tr.mig_out * (1.0 - self.dma_overlap)
             if vin:

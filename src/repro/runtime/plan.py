@@ -164,6 +164,12 @@ class PlacementPlan:
     # behavior; the key is dropped from the JSON then, keeping every
     # earlier golden plan byte-identical)
     prefill_chunk_tokens: int = 0
+    # slot_devices[s] is the decode shard owning batch slot s
+    # (``plan_serving(..., decode_devices=N)``).  None on single-device
+    # plans, and the key is dropped from the JSON then — the trivial
+    # placement folds away and every earlier golden plan stays
+    # byte-identical.
+    slot_devices: Optional[List[int]] = None
     # ---- multi-tenant accounting (None on single-tenant plans) ----
     # slot_tenants[s] names the tenant owning batch slot s (the engine admits
     # a request only into its own tenant's slots); tenant_quotas are the
@@ -255,6 +261,9 @@ class PlacementPlan:
             # one-shot prefill predates the chunk knob — same golden-JSON
             # stability pattern as tier_graph
             del d["prefill_chunk_tokens"]
+        if self.slot_devices is None:
+            # single-device plans predate slot placement — same pattern
+            del d["slot_devices"]
         return d
 
     def to_json(self) -> str:
@@ -551,11 +560,105 @@ def _tenant_knobs(wl, policy: str) -> dict:
     return knobs
 
 
+def validate_slot_devices(slot_devices, slots: int,
+                          decode_devices: int) -> List[int]:
+    """Check a slot->decode-shard mapping's geometry: one entry per batch
+    slot, every entry a valid shard index.  Shared by ``plan_serving`` (at
+    emission) and ``DisaggregatedEngine`` (at adoption), so a malformed
+    placement is rejected identically at both ends."""
+    sd = list(slot_devices)
+    if len(sd) != slots:
+        raise ValueError(f"slot_devices has {len(sd)} entries for "
+                         f"{slots} batch slots")
+    for s, d in enumerate(sd):
+        if not isinstance(d, int) or isinstance(d, bool) \
+                or not 0 <= d < decode_devices:
+            raise ValueError(f"slot_devices[{s}] = {d!r}: expected a shard "
+                             f"index in [0, {decode_devices})")
+    return sd
+
+
+def pack_slots(weights: Sequence[float], decode_devices: int,
+               slot_tenants: Optional[Sequence[str]] = None) -> List[int]:
+    """Tenant-aware LPT bin-packing of slots onto decode shards.
+
+    Heaviest slot first (weight = planned hot-window bytes), each slot lands
+    on the shard minimizing (same-tenant slots already there, load, index):
+    load balance with an anti-affinity tie-break that spreads a tenant's
+    slots across shards, so one device failure cannot take out a whole
+    tenant.  Deterministic — equal keys resolve by slot then shard index."""
+    load = [0.0] * decode_devices
+    tenant_count = [dict() for _ in range(decode_devices)]
+    out = [0] * len(weights)
+    order = sorted(range(len(weights)), key=lambda s: (-weights[s], s))
+    for s in order:
+        tn = slot_tenants[s] if slot_tenants else None
+        d = min(range(decode_devices),
+                key=lambda i: (tenant_count[i].get(tn, 0) if tn is not None
+                               else 0, load[i], i))
+        out[s] = d
+        load[d] += weights[s]
+        if tn is not None:
+            tenant_count[d][tn] = tenant_count[d].get(tn, 0) + 1
+    return out
+
+
+def _price_packing(cm: CostModel, graph, traffic, slot_devices, weights,
+                   n_devices: int, kv_row: float,
+                   flops_per_token: float) -> CostReport:
+    """Price a slot->shard packing on the mesh graph: each shard's share of
+    every step's reads/compute (proportional to the hot-window bytes it
+    hosts) becomes its own HBM pipe, the prefill group's add-on runs as the
+    prefill device's concurrent pipe, and the prefill->shard KV streams
+    ride the dev<->dev edges — so a skewed packing surfaces as a slower
+    slowest shard and the latency objective can reject it."""
+    total = sum(weights) or 1.0
+    frac = [sum(w for s, w in enumerate(weights)
+                if slot_devices[s] == d) / total for d in range(n_devices)]
+    prefill = f"dev{n_devices}"
+    dev_series, edge_series = [], []
+    for tr in traffic:
+        per_dev = {}
+        flows = {}
+        # admitted-prefill tokens behind this step's KV stream: the flops
+        # channel attributes them when the trace prices compute; the admit
+        # byte channel (extra_fast = computed tokens x KV row) covers
+        # flops-less traces
+        if flops_per_token:
+            ptok = tr.extra_flops / flops_per_token
+        elif kv_row:
+            ptok = tr.extra_fast / kv_row
+        else:
+            ptok = 0.0
+        for d in range(n_devices):
+            f = frac[d]
+            per_dev[f"dev{d}"] = dataclasses.replace(
+                tr, flops=tr.flops * f, fast_read=tr.fast_read * f,
+                slow_read=tr.slow_read * f, demand_read=tr.demand_read * f,
+                mig_in=tr.mig_in * f, mig_out=tr.mig_out * f,
+                migs=tr.migs * f, extra_flops=0.0, extra_fast=0.0,
+                prefill_flops=0.0, prefill_read=0.0)
+            flow = ptok * kv_row * f
+            if flow:
+                flows[(prefill, f"dev{d}")] = flow
+        # the prefill group's own pipe: prompt compute runs concurrently
+        # with the shards, so the prefill add-on is one more max() arm
+        # instead of serializing after the step
+        per_dev[prefill] = dataclasses.replace(
+            tr, flops=0.0, fast_read=0.0, slow_read=0.0, demand_read=0.0,
+            mig_in=0.0, mig_out=0.0, migs=0.0, stall=0.0)
+        dev_series.append(per_dev)
+        edge_series.append(flows)
+    return cm.price_on_graph(traffic, graph, edge_series,
+                             device_traffic=dev_series)
+
+
 def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
                  policy: Optional[str] = None,
                  lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
                  objective: str = "bytes", tier_graph=None,
                  prefill_chunk_tokens: int = 0,
+                 decode_devices: int = 1, disagg: bool = False,
                  hw=None) -> PlacementPlan:
     """Pick the hot window and prefetch look-ahead for serving-time tiering.
 
@@ -576,9 +679,32 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
     ``prefill_chunk_tokens > 0`` plans for the engine's *chunked* prefill:
     the prefill add-on is priced under the step's pipe maximum (chunks
     interleave with decode) instead of serializing after it, and the knob
-    rides in the plan for ``ContinuousBatcher`` to adopt."""
+    rides in the plan for ``ContinuousBatcher`` to adopt.
+
+    ``disagg=True`` plans for the disaggregated engine and rejects knob
+    combinations it cannot execute up front — chunked prefill interleaves
+    prompt chunks with decode on ONE device, the opposite of prefill/decode
+    disaggregation, so ``prefill_chunk_tokens > 0`` raises here instead of
+    at ``DisaggregatedEngine.__init__``.  ``decode_devices=N`` (N > 1,
+    implies ``disagg``) additionally places slots onto decode shards: the
+    plan gains ``slot_devices`` (tenant-aware LPT packing by planned
+    hot-window bytes — see ``pack_slots``), the serialized ``tier_graph``
+    becomes the (N+1)-device mesh (dev0..dev{N-1} decode shards, devN the
+    prefill group), and under the latency objective competing packings are
+    priced per shard via ``CostModel.price_on_graph`` so a skewed packing
+    loses to a balanced one."""
     cm = _resolve_cost_model(cost_model, hw, "plan_serving")
     _check_objective(objective, "plan_serving")
+    if decode_devices < 1:
+        raise ValueError(f"plan_serving(decode_devices={decode_devices}): "
+                         "need at least one decode device")
+    disagg = disagg or decode_devices > 1
+    if disagg and prefill_chunk_tokens:
+        raise ValueError(
+            "plan_serving(disagg=True) cannot plan chunked prefill "
+            f"(prefill_chunk_tokens={prefill_chunk_tokens}): the "
+            "disaggregated engine runs whole prompts on the prefill group "
+            "and would reject the plan at DisaggregatedEngine.__init__")
     sim_hw, fast_bytes = _graph_fold(cm, tier_graph, fast_bytes)
     wl = as_workload(workload)
     trace = getattr(wl, "trace", None)
@@ -670,11 +796,43 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
         slot_windows = [max(blk, (int(budget_tokens * w) // blk) * blk)
                         for w in weights]
 
+    # ---- slot -> decode-shard placement (decode_devices > 1) ----
+    slot_devices = None
+    graph_out = _graph_dict(tier_graph, cm, fast_bytes)
+    if decode_devices > 1:
+        from repro.runtime.tiergraph import TierGraph
+        mesh = TierGraph.mesh(decode_devices + 1, cm,
+                              fast_bytes / decode_devices)
+        pack_weights = [w * kv_tok_all for w in slot_windows]
+        st = list(slot_tenants) if tenants and slot_tenants else None
+        slot_devices = pack_slots(pack_weights, decode_devices, st)
+        traffic = getattr(win_sim, "step_traffic", None)
+        if objective == "latency" and traffic:
+            # audition the balanced packing against a contiguous split —
+            # the per-shard HBM pipes and prefill->shard streams make a
+            # skewed packing visibly slower, which the byte clock cannot see
+            contiguous = [min(decode_devices - 1,
+                              s * decode_devices // len(pack_weights))
+                          for s in range(len(pack_weights))]
+            kv_row = trace.num_layers * trace.kv_token_bytes
+            fpt = getattr(trace, "flops_per_token", 0.0)
+            priced = sorted(
+                (_price_packing(cm, mesh, traffic, p, pack_weights,
+                                decode_devices, kv_row, fpt).time, i, p)
+                for i, p in enumerate([slot_devices, contiguous]))
+            slot_devices = priced[0][2]
+        slot_devices = validate_slot_devices(slot_devices,
+                                             len(slot_windows),
+                                             decode_devices)
+        if graph_out is None:
+            graph_out = mesh.to_dict()
+
     return PlacementPlan(
         kind="serving", policy=win_policy, fast_bytes=fast_bytes, rs=rs,
         hot_window=best.hot_window, lookahead=best.lookahead,
         slot_hot_windows=slot_windows, page_tokens=blk,
         prefill_chunk_tokens=int(prefill_chunk_tokens),
+        slot_devices=slot_devices,
         slot_tenants=list(slot_tenants) if tenants and slot_tenants else None,
         tenant_quotas=dict(sorted(quotas.items()))
         if tenants and quotas else None,
@@ -689,7 +847,7 @@ def plan_serving(workload, cost_model=None, fast_bytes: float = None, *,
         cost_model=cm if objective == "latency" else None,
         predicted_step_times=list(best_pred.step_times)
         if best_pred else None,
-        tier_graph=_graph_dict(tier_graph, cm, fast_bytes))
+        tier_graph=graph_out)
 
 
 # ================================================================ entrypoint ==
@@ -700,6 +858,7 @@ def plan(workload, cost_model=None, fast_bytes: float = None, *,
          lookaheads: Sequence[int] = (2, 4, 8, 16, 32),
          objective: str = "bytes", tier_graph=None,
          prefill_chunk_tokens: int = 0,
+         decode_devices: int = 1, disagg: bool = False,
          hw=None) -> PlacementPlan:
     """THE entry point: profile -> plan for any workload.
 
@@ -730,4 +889,5 @@ def plan(workload, cost_model=None, fast_bytes: float = None, *,
     return plan_serving(wl, cm, fast_bytes, policy=policy,
                         lookaheads=lookaheads, objective=objective,
                         tier_graph=tier_graph,
-                        prefill_chunk_tokens=prefill_chunk_tokens)
+                        prefill_chunk_tokens=prefill_chunk_tokens,
+                        decode_devices=decode_devices, disagg=disagg)

@@ -528,6 +528,38 @@ class ContinuousBatcher:
                 self.sim_migration_bytes += self.page_tokens * self._row_bytes
         self._activate(slot, job.S, job.last, job.budget)
 
+    def _pool_decode_step(self):
+        """One decode forward on the persistent-pools layout: write-page
+        guarantee, the batched forward through the page-table view, and the
+        post-step cold-boundary advance.  Returns the decoded tokens (B,)
+        int32.  The seam the disaggregated engine overrides to run one
+        sub-batch forward per decode shard against that shard's own pools."""
+        # pre-step page guarantee per active slot: the write page exists
+        # and is private (CoW fires here on the first divergent write
+        # past a shared-prefix fork point — a no-op otherwise)
+        for s in range(self.B):
+            if self.active[s]:
+                self.pool.ensure_write_page(s, self._host_len[s])
+        paged_view = self.pool.paged_view(self._active_mask)
+        logits, new_caches, _ = model.forward(
+            self.params, self.cfg, {"tokens": self.last_tok[:, None]},
+            caches=self.pool.tree, cache_index=self.lengths,
+            decode=True, paged_view=paged_view)
+        self.pool.tree = new_caches
+        # advance each grown slot's own cold boundary by whole pages;
+        # twin-deduped shared pages advance the boundary with zero copy
+        for s in range(self.B):
+            if not self.active[s]:
+                continue
+            target = self._slot_cold_target(s, self._host_len[s] + 1)
+            while self.ptable.cold_tokens(s) < target:
+                if self.pool.demote_boundary(s):
+                    self.sim_migration_bytes += \
+                        self.page_tokens * self._row_bytes
+        self._note_tenant_pages()
+        return jnp.argmax(logits[:, -1, :self.cfg.vocab_size], axis=-1) \
+            .astype(jnp.int32)
+
     def step(self):
         """One lockstep decode step across all active slots — each slot writes
         its KV at its own length (vector cache_index -> row-wise scatter).
@@ -551,74 +583,55 @@ class ContinuousBatcher:
                 self._mig_accounted = self.sim_migration_bytes
                 return True
             return False
-        paged_view = None
         if self.pool is not None:
-            # pre-step page guarantee per active slot: the write page exists
-            # and is private (CoW fires here on the first divergent write
-            # past a shared-prefix fork point — a no-op otherwise)
-            for s in range(self.B):
-                if self.active[s]:
-                    self.pool.ensure_write_page(s, self._host_len[s])
-            paged_view = self.pool.paged_view(self._active_mask)
-            caches = self.pool.tree
-        elif self.paged is not None:
-            caches = self.paged.merged()
-        elif self.tiered is not None:
-            caches = self.tiered.merged()
+            tok = self._pool_decode_step()
         else:
-            caches = self.caches
-        logits, new_caches, _ = model.forward(
-            self.params, self.cfg, {"tokens": self.last_tok[:, None]},
-            caches=caches, cache_index=self.lengths,
-            decode=True, paged_view=paged_view)
-        if self.pool is not None:
-            self.pool.tree = new_caches
-            # advance each grown slot's own cold boundary by whole pages;
-            # twin-deduped shared pages advance the boundary with zero copy
-            for s in range(self.B):
-                if not self.active[s]:
-                    continue
-                target = self._slot_cold_target(s, self._host_len[s] + 1)
-                while self.ptable.cold_tokens(s) < target:
-                    if self.pool.demote_boundary(s):
-                        self.sim_migration_bytes += \
-                            self.page_tokens * self._row_bytes
-            self._note_tenant_pages()
-        elif self.paged is not None:
-            self.paged.hot = new_caches
-            # advance each active slot's own boundary: when the new length
-            # pushes a page out of the slot's hot window, demote just that
-            # page (hot -> cold pool in the table, rows re-hosted)
-            for s in range(self.B):
-                if not self.active[s]:
-                    continue
-                new_len = self._host_len[s] + 1
-                while self.ptable.n_pages[s] * self.page_tokens < new_len:
-                    self.ptable.alloc(s, 0)        # decode grew into a new page
-                target = self._slot_cold_target(s, new_len)
-                moved = self.paged.demote_rows(s, target)
-                while self.ptable.cold_tokens(s) < target:
-                    self.ptable.demote(s, self.ptable.cold_pages(s))
-                self.sim_migration_bytes += moved * self._row_bytes
-            self._note_tenant_pages()
-        elif self.tiered is not None:
-            _, hot = kvcache.split_seq_cache(new_caches, self.max_seq,
-                                             self.cold_len)
-            self.tiered.hot = hot
-            # this step's KV writes land at each slot's length; a write
-            # inside the prefix (short slots) re-hosts only that slot's row,
-            # not a re-split of the whole batch cache
-            for s in range(self.B):
-                if self.active[s] and self._host_len[s] < self.cold_len:
-                    pos = self._host_len[s]
-                    self.tiered.cold = kvcache.to_host(kvcache.copy_slot_rows(
-                        self.tiered.cold, new_caches, s, pos, pos + 1,
-                        self.max_seq))
-                    self.sim_migration_bytes += self._row_bytes
-        else:
-            self.caches = new_caches
-        tok = jnp.argmax(logits[:, -1, :self.cfg.vocab_size], axis=-1) \
-            .astype(jnp.int32)
+            if self.paged is not None:
+                caches = self.paged.merged()
+            elif self.tiered is not None:
+                caches = self.tiered.merged()
+            else:
+                caches = self.caches
+            logits, new_caches, _ = model.forward(
+                self.params, self.cfg, {"tokens": self.last_tok[:, None]},
+                caches=caches, cache_index=self.lengths, decode=True)
+            if self.paged is not None:
+                self.paged.hot = new_caches
+                # advance each active slot's own boundary: when the new
+                # length pushes a page out of the slot's hot window, demote
+                # just that page (hot -> cold pool in the table, rows
+                # re-hosted)
+                for s in range(self.B):
+                    if not self.active[s]:
+                        continue
+                    new_len = self._host_len[s] + 1
+                    while self.ptable.n_pages[s] * self.page_tokens < new_len:
+                        self.ptable.alloc(s, 0)    # decode grew into a new page
+                    target = self._slot_cold_target(s, new_len)
+                    moved = self.paged.demote_rows(s, target)
+                    while self.ptable.cold_tokens(s) < target:
+                        self.ptable.demote(s, self.ptable.cold_pages(s))
+                    self.sim_migration_bytes += moved * self._row_bytes
+                self._note_tenant_pages()
+            elif self.tiered is not None:
+                _, hot = kvcache.split_seq_cache(new_caches, self.max_seq,
+                                                 self.cold_len)
+                self.tiered.hot = hot
+                # this step's KV writes land at each slot's length; a write
+                # inside the prefix (short slots) re-hosts only that slot's
+                # row, not a re-split of the whole batch cache
+                for s in range(self.B):
+                    if self.active[s] and self._host_len[s] < self.cold_len:
+                        pos = self._host_len[s]
+                        self.tiered.cold = kvcache.to_host(
+                            kvcache.copy_slot_rows(
+                                self.tiered.cold, new_caches, s, pos, pos + 1,
+                                self.max_seq))
+                        self.sim_migration_bytes += self._row_bytes
+            else:
+                self.caches = new_caches
+            tok = jnp.argmax(logits[:, -1, :self.cfg.vocab_size], axis=-1) \
+                .astype(jnp.int32)
         self.last_tok = tok
         self.lengths = self.lengths + self._active_inc
         tok_host = jax.device_get(tok)         # the decoded tokens themselves
@@ -728,18 +741,39 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                           max_seq: int, page_tokens: int, row_bytes: float,
                           slot_tenants=None,
                           plan_schedule: Sequence[tuple] = (),
-                          prefill_chunk_tokens: int = 0) -> dict:
+                          prefill_chunk_tokens: int = 0,
+                          dense_admit: bool = False,
+                          slot_devices=None) -> dict:
     """Pure-Python replay of the pools-layout batcher's bookkeeping: given
-    the request stream ``[(prompt_tokens, decode_tokens[, tenant]), ...]``
-    and a plan, predict ``sim_migration_bytes`` (total and the per-decode-
-    step ``step_migration_bytes`` series a CostModel prices), the pool's
-    ``page_copies`` / ``admit_page_writes`` counters, and the per-tenant
-    hot-pool byte peaks
+    the request stream ``[(prompt, decode_tokens[, tenant[, prefix_key]]),
+    ...]`` and a plan, predict ``sim_migration_bytes`` (total and the
+    per-decode-step ``step_migration_bytes`` series a CostModel prices),
+    the pool's ``page_copies`` / ``admit_page_writes`` counters, and the
+    per-tenant hot-pool byte peaks
     — *exactly* (integer-for-integer) what a ``ContinuousBatcher``
-    (``paged=True`` + ``use_paged_decode``, no prefix sharing) will report
+    (``paged=True`` + ``use_paged_decode``) will report
     on the same deterministic stream.  This is the engine/simulator
     agreement contract: the simulator predicts, the engine counts, the two
     never drift (``tests/test_multi_tenant.py`` pins it).
+
+    ``prompt`` is either the prompt token *count* or the prompt token
+    *sequence*; requests carrying a ``prefix_key`` must pass the sequence —
+    the replay mirrors the engine's donor registry (LCP against the last
+    prompt registered under the key, full pages mapped onto the donor's
+    physical pages, refcounted, cold twins deduping shared demotions), so
+    ``admit_page_writes`` / ``xdev_migration_bytes`` count only the private
+    tail and stay integer-exact for shared-prefix admits.  ``dense_admit``
+    replays the one-shot dense admission path (the disaggregated engine's
+    ``_admit_pool``), whose shared-page cap differs from the pool-direct
+    prefill scheduler's by the final-row carve-out.
+
+    ``slot_devices`` (defaulting to the plan's) splits the replay across
+    decode shards: sharing is intra-shard only, ``device_hot_peak`` tracks
+    each shard's distinct-hot-page byte peak, and ``edge_migration_bytes``
+    ledgers every ``(src, dst)`` device edge — prefill->shard admit streams
+    and shard->shard slot re-homings (a ``plan_schedule`` entry whose plan
+    moves an active slot's owner) — integer-exactly as the engine's
+    ``MeshPageTable`` counts them.
 
     The replay mirrors the engine's event order: per step, binding of queued
     requests to free slots (FIFO within each tenant), the prefill drain
@@ -767,44 +801,178 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
     if slot_tenants and len(slot_tenants) != slots:
         raise ValueError(f"slot_tenants has {len(slot_tenants)} entries for "
                          f"{slots} slots (plan/batch geometry mismatch)")
-    queue = [(int(r[0]), int(r[1]), r[2] if len(r) > 2 else None)
-             for r in requests]
+    if slot_devices is None and plan is not None:
+        slot_devices = getattr(plan, "slot_devices", None)
+    if slot_devices:
+        slot_devices = list(slot_devices)
+        if len(slot_devices) != slots:
+            raise ValueError(f"slot_devices has {len(slot_devices)} entries "
+                             f"for {slots} slots")
+
+    def parse(r):
+        p = r[0]
+        if isinstance(p, (list, tuple)):
+            toks = tuple(int(t) for t in p)
+            plen = len(toks)
+        else:
+            plen, toks = int(p), None
+        pk = r[3] if len(r) > 3 else None
+        if pk is not None and toks is None:
+            raise ValueError("a prefix_key needs the prompt's token values "
+                             "(pass the token sequence, not its length): "
+                             "the replay LCPs them against the donor")
+        return (plen, int(r[1]), r[2] if len(r) > 2 else None, toks, pk)
+
+    queue = [parse(r) for r in requests]
     active = [False] * slots
     host_len = [0] * slots
     budget = [0] * slots
-    n_pages = [0] * slots
-    cold = [0] * slots
+    # physical-page model, mirroring PageTable: per-slot phys ids + tiers
+    # (cold-prefix), refcounts, and the cold-twin memo that dedupes shared
+    # demotions — without prefix sharing it degenerates to the old counters
+    ptab: list = [[] for _ in range(slots)]
+    ptier: list = [[] for _ in range(slots)]
+    hot_ref: dict = {}
+    cold_ref: dict = {}
+    cold_twin: dict = {}                   # hot phys -> its live cold twin
+    twin_of: dict = {}
+    donors: dict = {}                      # prefix_key -> (slot, tokens)
+    next_phys = [0]
     mig = 0.0
     copies = admit_writes = 0
     peaks: dict = {}
+    dev_peaks: dict = {}
+    edge_bytes: dict = {}
     step_mig: list = []
 
     def slot_tn(s):
         return slot_tenants[s] if slot_tenants else None
 
+    def dev(s):
+        return slot_devices[s] if slot_devices else 0
+
+    def dev_name(d):
+        return f"dev{d}" if slot_devices else "decode"
+
+    def fresh():
+        next_phys[0] += 1
+        return next_phys[0]
+
+    def release(tier, phys):
+        refs = cold_ref if tier else hot_ref
+        refs[phys] -= 1
+        if refs[phys] == 0:                # PageTable._release: memo death
+            if tier == 0:
+                twin = cold_twin.pop(phys, None)
+                if twin is not None:
+                    twin_of.pop(twin, None)
+            else:
+                src = twin_of.pop(phys, None)
+                if src is not None:
+                    cold_twin.pop(src, None)
+
+    def free_slot(s):
+        for t, p in zip(ptier[s], ptab[s]):
+            release(t, p)
+        ptab[s], ptier[s] = [], []
+
+    def alloc(s):
+        p = fresh()
+        hot_ref[p] = 1
+        ptab[s].append(p)
+        ptier[s].append(0)
+
+    def share(s, donor_slot, n):
+        for i in range(n):
+            p, t = ptab[donor_slot][i], ptier[donor_slot][i]
+            (cold_ref if t else hot_ref)[p] += 1
+            ptab[s].append(p)
+            ptier[s].append(t)
+
+    def cold_pages(s):
+        c = 0
+        for t in ptier[s]:
+            if t != 1:
+                break
+            c += 1
+        return c
+
     def note():
-        if not slot_tenants:
-            return
-        per: dict = {}
+        per_t: dict = {}
+        per_d: dict = {}
         for s in range(slots):
+            hot = {p for p, t in zip(ptab[s], ptier[s]) if t == 0}
+            per_d.setdefault(dev(s), set()).update(hot)
             tn = slot_tn(s)
             if tn is not None:
-                per[tn] = per.get(tn, 0) + (n_pages[s] - cold[s])
-        for tn, hot in per.items():
-            v = hot * pg * row_bytes
+                per_t.setdefault(tn, set()).update(hot)
+        for tn, pages in per_t.items():
+            v = len(pages) * pg * row_bytes
             if v > peaks.get(tn, 0):
                 peaks[tn] = v
+        for d, pages in per_d.items():
+            v = len(pages) * pg * row_bytes
+            if v > dev_peaks.get(dev_name(d), 0):
+                dev_peaks[dev_name(d)] = v
 
-    def demote_to(s, target):
+    def demote_one(s):
+        # PageTable.demote: first sharer copies and memoizes a cold twin,
+        # later sharers reuse it — shared bytes migrate exactly once
         nonlocal mig, copies
-        while cold[s] * pg < target:
-            cold[s] += 1
+        idx = cold_pages(s)
+        src = ptab[s][idx]
+        twin = cold_twin.get(src)
+        if twin is not None and cold_ref.get(twin, 0) > 0:
+            cold_ref[twin] += 1
+            cold_phys, copied = twin, False
+        else:
+            cold_phys = fresh()
+            cold_ref[cold_phys] = 1
+            copied = True
+            if hot_ref[src] > 1:           # others still share: memoize
+                cold_twin[src] = cold_phys
+                twin_of[cold_phys] = src
+        release(0, src)
+        ptab[s][idx] = cold_phys
+        ptier[s][idx] = 1
+        if copied:
             mig += pg * row_bytes
             copies += 1
 
+    def demote_to(s, target):
+        while cold_pages(s) * pg < target:
+            demote_one(s)
+
+    def start_slot(s, prompt_len, toks, pk):
+        # _start_job / _admit_pool head: stale donor registrations for the
+        # slot die with its pages, then prefix-share against the donor —
+        # intra-shard only (MeshPageTable refuses cross-device aliasing)
+        for key in [k for k, (ds, _) in donors.items() if ds == s]:
+            del donors[key]
+        free_slot(s)
+        shared = 0
+        if pk is not None:
+            donor = donors.get(pk)
+            if donor is not None and donor[0] != s and ptab[donor[0]] \
+                    and dev(donor[0]) == dev(s):
+                lcp = 0
+                for a, b in zip(toks, donor[1]):
+                    if a != b:
+                        break
+                    lcp += 1
+                cap = lcp // pg
+                if not dense_admit:        # the suffix pass computes >= 1 row
+                    cap = min(cap, (prompt_len - 1) // pg)
+                shared = min(cap, len(ptab[donor[0]]))
+                if shared:
+                    share(s, donor[0], shared)
+            donors[pk] = (s, toks)
+        return shared
+
     schedule = sorted(((int(t), p) for t, p in plan_schedule),
                       key=lambda e: e[0])
-    jobs: dict = {}                        # slot -> [done, prompt, decode, started]
+    # slot -> [done, prompt, decode, started, tokens, prefix_key]
+    jobs: dict = {}
     while queue or jobs or any(active):
         mig0 = mig
         while schedule and schedule[0][0] <= len(step_mig):
@@ -822,17 +990,52 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
             for s in range(slots):
                 if active[s]:
                     demote_to(s, plan.cold_len_slot(s, host_len[s], pg))
+            new_sd = getattr(plan, "slot_devices", None)
+            if new_sd and slot_devices and list(new_sd) != slot_devices:
+                # slot re-homing: the demoted-first hot tail crosses the
+                # shard<->shard edge (MeshPageTable.migrate_slot; cold pages
+                # move host-internally and never touch a device edge)
+                if len(new_sd) != slots:
+                    raise ValueError(
+                        f"slot_devices has {len(new_sd)} entries for "
+                        f"{slots} slots")
+                for s in range(slots):
+                    if new_sd[s] == slot_devices[s]:
+                        continue
+                    if active[s]:
+                        hot = sum(1 for t in ptier[s] if t == 0)
+                        key = (dev_name(slot_devices[s]),
+                               dev_name(new_sd[s]))
+                        edge_bytes[key] = edge_bytes.get(key, 0.0) \
+                            + hot * pg * row_bytes
+                        # migrate_slot lands *exclusive* pages on the
+                        # destination and releases the source refs (any
+                        # remaining sharers keep the source pages, twin
+                        # memos die with the refs)
+                        moved = []
+                        for t_, p in zip(ptier[s], ptab[s]):
+                            release(t_, p)
+                            p2 = fresh()
+                            (cold_ref if t_ else hot_ref)[p2] = 1
+                            moved.append(p2)
+                        ptab[s] = moved
+                    elif s not in jobs and ptab[s]:
+                        # a finished slot's stale pages are dropped on
+                        # ownership change, not copied across the edge
+                        free_slot(s)
+                slot_devices = list(new_sd)
             note()
         for s in range(slots):             # ContinuousBatcher._admit: bind
             if active[s] or s in jobs or not queue:
                 continue
             tn_s = slot_tn(s)
-            qi = next((i for i, (_, _, tn) in enumerate(queue)
-                       if tn_s is None or tn is None or tn == tn_s), None)
+            qi = next((i for i, q in enumerate(queue)
+                       if tn_s is None or q[2] is None or q[2] == tn_s),
+                      None)
             if qi is None:
                 continue
-            p, d, _ = queue.pop(qi)
-            jobs[s] = [0, p, d, False]     # queued -> prefilling(0)
+            p, d, _, toks, pk = queue.pop(qi)
+            jobs[s] = [0, p, d, False, toks, pk]   # queued -> prefilling(0)
         spent = 0                          # _drain_prefill: slot order,
         stop = False                       # page-aligned chunks, one budget
         for s in sorted(jobs):
@@ -843,8 +1046,8 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                 if prefill_chunk_tokens and spent >= prefill_chunk_tokens:
                     stop = True            # resume next step, all slots
                     break
-                if not job[3]:             # _start_job: free_slot
-                    n_pages[s] = cold[s] = 0
+                if not job[3]:             # _start_job: free + prefix share
+                    job[0] = start_slot(s, job[1], job[4], job[5]) * pg
                     job[3] = True
                 done, p = job[0], job[1]
                 pages_left = -(-(p - done) // pg)
@@ -853,8 +1056,14 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                         max(1, (prefill_chunk_tokens - spent) // pg))
                 end = min(p, done + take * pg)
                 spent += end - done
-                admit_writes += -(-end // pg) - n_pages[s]
-                n_pages[s] = -(-end // pg)
+                new = -(-end // pg) - len(ptab[s])
+                if new:
+                    admit_writes += new
+                    key = ("prefill", dev_name(dev(s)))
+                    edge_bytes[key] = edge_bytes.get(key, 0.0) \
+                        + new * pg * row_bytes
+                    for _ in range(new):
+                        alloc(s)
                 job[0] = end
                 if end >= p:               # _finish_job -> active
                     del jobs[s]
@@ -867,8 +1076,8 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                 continue
             break
         for s in range(slots):             # pool.ensure_write_page
-            if active[s] and n_pages[s] * pg < host_len[s] + 1:
-                n_pages[s] += 1
+            if active[s] and len(ptab[s]) * pg < host_len[s] + 1:
+                alloc(s)
         for s in range(slots):             # post-forward boundary advance
             if active[s]:
                 demote_to(s, plan.cold_len_slot(s, host_len[s] + 1, pg))
@@ -881,12 +1090,15 @@ def predict_pool_counters(requests: Sequence[tuple], plan, *, slots: int,
                     active[s] = False
         step_mig.append(mig - mig0)        # one engine decode step's delta
     # xdev_migration_bytes: the planner's predicted device<->device edge
-    # traffic under prefill/decode disaggregation — every admitted page is
-    # prefilled on the prefill group and crosses the edge exactly once
+    # traffic under prefill/decode disaggregation — every *private* admitted
+    # page is prefilled on the prefill group and crosses the edge exactly
+    # once; shared-prefix pages stay put on the decode side and never cross
     # (serve/disagg.py's MeshPageTable ledger matches it integer-exactly)
     return {"migration_bytes": mig, "page_copies": copies,
             "admit_page_writes": admit_writes, "tenant_hot_peak": peaks,
             "step_migration_bytes": step_mig,
+            "device_hot_peak": dev_peaks,
+            "edge_migration_bytes": edge_bytes,
             "xdev_migration_bytes": admit_writes * pg * row_bytes}
 
 

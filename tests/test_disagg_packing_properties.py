@@ -1,0 +1,62 @@
+"""Property-based suite (hypothesis) for slot->shard packings.
+
+Fuzzes random slot->device packings through the pure-python replay
+(``predict_pool_counters``) and through the planner's packer: for ANY
+legal packing the per-edge admit ledger must attribute every stream to
+the slot's owning shard and sum to ``xdev_migration_bytes``, and
+``pack_slots`` must always emit a geometry ``validate_slot_devices``
+accepts.  The deterministic seeded twins of these properties live in
+``test_disagg_multidev.py`` so the invariants stay exercised without the
+optional dep.
+"""
+import dataclasses
+
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dev dep: skip, don't error
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_replay_edge_ledger_under_random_packings(data):
+    from repro import runtime
+    from repro.core.hardware import TPU_V5E
+    from repro.core.hmsim import build_serve_trace
+    from repro.serve.engine import predict_pool_counters
+    slots = data.draw(st.integers(2, 4))
+    n_dev = data.draw(st.integers(1, 3))
+    packing = [data.draw(st.integers(0, n_dev - 1)) for _ in range(slots)]
+    reqs = [(data.draw(st.integers(5, 14)), data.draw(st.integers(3, 7)))
+            for _ in range(data.draw(st.integers(slots, slots + 3)))]
+    trace = build_serve_trace(reqs, num_slots=slots, num_layers=4,
+                              kv_token_bytes=64)
+    plan = runtime.plan(trace, TPU_V5E, 0.3 * trace.peak_kv_bytes())
+    plan = dataclasses.replace(plan, page_tokens=4, hot_window=8,
+                               slot_hot_windows=None)
+    pred = predict_pool_counters(reqs, plan, slots=slots, max_seq=32,
+                                 page_tokens=4, row_bytes=64.0,
+                                 dense_admit=True, slot_devices=packing)
+    edges = pred["edge_migration_bytes"]
+    used = {f"dev{d}" for d in packing}
+    for (src, dst), v in edges.items():
+        assert src == "prefill" and dst in used
+        assert v >= 0 and v == int(v)
+    assert sum(edges.values()) == pred["xdev_migration_bytes"]
+    assert set(pred["device_hot_peak"]) <= used
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_pack_slots_legal_and_balanced(data):
+    from repro.runtime.plan import pack_slots, validate_slot_devices
+    slots = data.draw(st.integers(1, 8))
+    n_dev = data.draw(st.integers(1, 4))
+    weights = [data.draw(st.floats(0.0, 1e6, allow_nan=False))
+               for _ in range(slots)]
+    out = pack_slots(weights, n_dev)
+    assert validate_slot_devices(out, slots, n_dev) == out
+    counts = [out.count(d) for d in range(n_dev)]
+    if slots >= n_dev:
+        # LPT never leaves a device idle while another stacks up
+        assert min(counts) >= 1 or max(counts) <= 1
